@@ -1,0 +1,104 @@
+"""Dependency-engine microbenchmarks (§3.2): scheduling overhead per op,
+discovered parallelism (wave widths) for mixed imperative/symbolic loads,
+and the mutation-serialization guarantee cost.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Engine, NDArray
+
+
+def time_fn(fn, n=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_push_overhead(n_ops=2000):
+    def run():
+        eng = Engine(record_waves=False)
+        a = NDArray(np.ones(4, np.float32), engine=eng)
+        for _ in range(n_ops):
+            a = a + 1.0
+        eng.wait_all()
+    return time_fn(run) / n_ops
+
+
+def bench_parallelism_width(width=64, depth=10):
+    eng = Engine()
+    arrs = [NDArray(np.ones(8, np.float32), engine=eng)
+            for _ in range(width)]
+    for _ in range(depth):
+        arrs = [a * 1.001 for a in arrs]
+    eng.wait_all()
+    s = eng.stats()
+    return s["max_wave"], s["mean_wave"]
+
+
+def bench_mixed_load():
+    """Symbolic executor + imperative updates + kvstore in one queue."""
+    from repro.core import KVStoreLocal, Variable, FullyConnected, \
+        SoftmaxOutput, sgd_updater, reset_default_engine
+    rng = np.random.RandomState(0)
+    eng = reset_default_engine()
+    data, label = Variable("data"), Variable("label")
+    net = SoftmaxOutput(FullyConnected(data, 32, name="fc"), label)[0]
+    args = {"data": rng.randn(64, 16).astype(np.float32),
+            "label": rng.randint(0, 10, 64).astype(np.float32),
+            "fc_weight": rng.randn(32, 16).astype(np.float32) * .1,
+            "fc_bias": np.zeros(32, np.float32)}
+    kv = KVStoreLocal(eng)
+    kv.set_updater(sgd_updater(0.1))
+    kv.init("w", args["fc_weight"])
+    w = NDArray(args["fc_weight"], engine=eng)
+    ex = net.bind({**args, "fc_weight": w}, grad_wrt=["fc_weight"],
+                  check_plan=False)
+
+    def run():
+        for _ in range(10):
+            kv.pull("w", out=w)
+            _, grads = ex.forward_backward(lazy=True)
+            kv.push("w", grads["fc_weight"])
+        eng.wait_all()
+    us = time_fn(run) / 10
+    return us, eng.stats()
+
+
+def run(csv=True):
+    rows = []
+    rows.append(("engine_push_overhead_per_op", round(bench_push_overhead(), 2),
+                 "python-side schedule+exec cost"))
+    mw, meanw = bench_parallelism_width()
+    rows.append(("engine_max_wave_width", mw, "64 independent chains"))
+    rows.append(("engine_mean_wave_width", round(meanw, 1), ""))
+    us, stats = bench_mixed_load()
+    rows.append(("engine_mixed_train_step_us", round(us, 1),
+                 "kv.pull+fwd_bwd+kv.push, jointly scheduled"))
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    return rows
+
+
+def validate(rows):
+    by = {r[0]: r[1] for r in rows}
+    fails = []
+    if by["engine_max_wave_width"] < 64:
+        fails.append("engine failed to discover independent parallelism")
+    if by["engine_push_overhead_per_op"] > 2000:
+        fails.append("per-op overhead excessive")
+    return fails
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("VALIDATION:", validate(rows) or "PASS")

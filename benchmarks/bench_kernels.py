@@ -1,0 +1,90 @@
+"""Pallas kernel sanity benchmarks.
+
+On this CPU container the kernels run in interpret mode, so wall-clock is
+NOT the kernel's merit (TPU is the target); what we benchmark here is
+(a) allclose vs the jnp oracle at benchmark shapes, and (b) the oracle's
+jnp wall time as the baseline the TPU kernel must beat (recorded for
+the EXPERIMENTS.md §Perf bookkeeping).
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.fused_update import sgd_momentum
+
+
+def time_fn(fn, n=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(csv=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention @ a serving-ish shape
+    B, S, H, K, hd = 1, 512, 8, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(np.abs(np.asarray(out) - np.asarray(want)).max())
+    rows.append(("kernel_flash_attn_maxerr", err, "interpret vs oracle"))
+    oracle = jax.jit(lambda: ref.flash_attention_ref(q, k, v, causal=True))
+    rows.append(("kernel_flash_attn_oracle_us", round(time_fn(oracle), 1),
+                 "jnp oracle wall (TPU kernel must beat)"))
+
+    # rmsnorm
+    x = jax.random.normal(ks[0], (4096, 1024), jnp.float32)
+    w = jax.random.normal(ks[1], (1024,)) * 0.1
+    err = float(np.abs(np.asarray(rmsnorm(x, w))
+                       - np.asarray(ref.rmsnorm_ref(x, w))).max())
+    rows.append(("kernel_rmsnorm_maxerr", err, ""))
+    oracle = jax.jit(lambda: ref.rmsnorm_ref(x, w))
+    rows.append(("kernel_rmsnorm_oracle_us", round(time_fn(oracle), 1), ""))
+
+    # fused update
+    p = jax.random.normal(ks[0], (1 << 20,))
+    g = jax.random.normal(ks[1], (1 << 20,))
+    m = jnp.zeros((1 << 20,))
+    new_p, new_m = sgd_momentum(p, g, m, lr=0.1, mu=0.9, weight_decay=1e-4)
+    wp, wm = ref.sgd_momentum_ref(p, g, m, lr=0.1, mu=0.9, weight_decay=1e-4)
+    err = float(np.abs(np.asarray(new_p) - np.asarray(wp)).max())
+    rows.append(("kernel_fused_update_maxerr", err, "1M params"))
+    oracle = jax.jit(lambda: ref.sgd_momentum_ref(p, g, m, lr=0.1, mu=0.9,
+                                                  weight_decay=1e-4))
+    rows.append(("kernel_fused_update_oracle_us", round(time_fn(oracle), 1),
+                 ""))
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    return rows
+
+
+def validate(rows):
+    fails = []
+    for name, val, _ in rows:
+        if name.endswith("maxerr") and val > 1e-4:
+            fails.append(f"{name}: {val}")
+    return fails
+
+
+if __name__ == "__main__":
+    rows = run()
+    print("VALIDATION:", validate(rows) or "PASS")

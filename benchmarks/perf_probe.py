@@ -1,0 +1,118 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""One §Perf hillclimb iteration: recompile an (arch × shape) pair under a
+set of perf flags and print the roofline terms.
+
+  python -m benchmarks.perf_probe --arch dbrx-132b --shape train_4k \
+      [--flags window_slice=1 ce_chunks=8 ...] [--probes]
+
+Reports both the full-model compile (memory proof) and the probe-composed
+totals (exact FLOPs/bytes/collectives), plus deltas vs the stored baseline
+JSON when available.
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, LONG_CONTEXT_ARCHS, get_config
+from repro.models import INPUT_SHAPES
+from repro import perf_flags
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def parse_flags(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=")
+        cur = getattr(perf_flags.FLAGS, k)
+        if isinstance(cur, bool):
+            out[k] = v not in ("0", "false", "False")
+        elif isinstance(cur, int):
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def terms(block, ns=None, block4=None):
+    if block4 is not None and ns is not None:
+        per = {k: (block4[k] - block[k]) / 2.0
+               for k in ("flops", "bytes_accessed")}
+        coll_per = (block4["collectives"]["total"]
+                    - block["collectives"]["total"]) / 2.0
+        flops = block["flops"] - 2 * per["flops"] + ns * per["flops"]
+        byts = (block["bytes_accessed"] - 2 * per["bytes_accessed"]
+                + ns * per["bytes_accessed"])
+        coll = (block["collectives"]["total"] - 2 * coll_per + ns * coll_per)
+    else:
+        flops = block["flops"]
+        byts = block["bytes_accessed"]
+        coll = block["collectives"]["total"]
+    return {"compute_s": flops / PEAK_FLOPS, "memory_s": byts / HBM_BW,
+            "collective_s": coll / ICI_BW, "flops": flops, "bytes": byts,
+            "coll_bytes": coll}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), required=True)
+    ap.add_argument("--flags", nargs="*", default=[])
+    ap.add_argument("--probes", action="store_true",
+                    help="also compile 2/4-superblock probes for exact totals")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    fl = parse_flags(args.flags)
+    perf_flags.set_flags(**fl)
+    print("flags:", {k: getattr(perf_flags.FLAGS, k)
+                     for k in vars(perf_flags.FLAGS)})
+
+    from repro.launch.dryrun import analyze, lower_and_compile, probe_cfg
+    from repro.launch.mesh import make_production_mesh
+
+    long_ctx = (args.shape == "long_500k"
+                and args.arch in LONG_CONTEXT_ARCHS)
+    cfg = get_config(args.arch, long_context=long_ctx)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    _, compiled, tl, tc = lower_and_compile(cfg, args.shape, mesh)
+    full = analyze(compiled)
+    peak = full["memory"]["peak_per_device"] / 2**30
+    print(f"compile {tc:.1f}s  peak/device {peak:.2f} GiB")
+    t = terms(full)
+    print(f"full(scan-once): compute {t['compute_s']:.4f}s "
+          f"memory {t['memory_s']:.4f}s collective {t['collective_s']:.4f}s")
+
+    if args.probes:
+        blocks = {}
+        for n in (2, 4):
+            if cfg.n_super < n:
+                continue
+            _, c2, _, _ = lower_and_compile(probe_cfg(cfg, n), args.shape,
+                                            mesh)
+            blocks[n] = analyze(c2)
+        if 2 in blocks and 4 in blocks:
+            t = terms(blocks[2], cfg.n_super, blocks[4])
+            print(f"composed: compute {t['compute_s']:.4f}s "
+                  f"memory {t['memory_s']:.4f}s "
+                  f"collective {t['collective_s']:.4f}s "
+                  f"(flops {t['flops']:.3e}, bytes {t['bytes']:.3e}, "
+                  f"coll {t['coll_bytes']:.3e})")
+
+    # baseline comparison
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    base = (Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+            / f"{args.arch}__{args.shape}__{mesh_name}.json")
+    if base.exists():
+        rec = json.loads(base.read_text())
+        if rec.get("status") == "OK":
+            bpeak = rec["full"]["memory"]["peak_per_device"] / 2**30
+            print(f"baseline peak {bpeak:.2f} GiB -> delta "
+                  f"{peak - bpeak:+.2f} GiB ({(peak/bpeak - 1) * 100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory term     = HLO_bytes_per_device / 819 GB/s
+  collective term = link_bytes_per_device / 50 GB/s
+
+cost_analysis counts lax.scan bodies once, so totals are composed from the
+unrolled 1- and 2-superblock probes:
+    per_super = probe2 - probe1;  base = probe1 - per_super
+    total     = base + n_super * per_super
+(The full-model compile is still the existence/memory proof; its aggregate
+numbers are recorded as `full_*` with the scan caveat.)
+
+MODEL_FLOPS = 6·N·T (training; fwd 2NT + bwd 4NT) or 2·N·T (prefill) or
+2·N_active·B (decode), per device (÷256 chips), with N_active for MoE.
+The ratio MODEL/HLO exposes remat/redundancy waste (training with block
+remat recomputes the forward: ideal ratio ≈ 6/8 = 0.75).
+
+Usage: python -m benchmarks.roofline [--csv|--md] [--out FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+SHAPE_TOKENS = {  # (tokens per step, flops factor: train 6, fwd-only 2)
+    "train_4k": (256 * 4096, 6),
+    "prefill_32k": (32 * 32768, 2),
+    "decode_32k": (128 * 1, 2),
+    "long_500k": (1 * 1, 2),
+}
+
+
+def _n_super(rec) -> int:
+    from repro.configs import LONG_CONTEXT_ARCHS, get_config
+    long_ctx = (rec["shape"] == "long_500k"
+                and rec["arch"] in LONG_CONTEXT_ARCHS)
+    return get_config(rec["arch"], long_context=long_ctx).n_super
+
+
+def composed(rec, field_path, ns):
+    """base + n_super * per_super from the {2,4}-superblock probes;
+    falls back to full (scan caveat noted)."""
+    def get(block):
+        cur = rec.get(block)
+        if cur is None:
+            return None
+        for k in field_path:
+            cur = cur[k]
+        return cur
+    p2, p4 = get("probe2"), get("probe4")
+    full = get("full")
+    if p2 is None or p4 is None:
+        return full, "full(scan-caveat)"
+    per = (p4 - p2) / 2.0
+    base = p2 - 2.0 * per
+    return base + ns * per, "probes"
+
+
+def analyze_record(rec):
+    if rec.get("status") != "OK":
+        return None
+    ns = rec.get("n_super") or _n_super(rec)
+    flops, src = composed(rec, ("flops",), ns)
+    mem_bytes, _ = composed(rec, ("bytes_accessed",), ns)
+    coll, _ = composed(rec, ("collectives", "total"), ns)
+    t_comp = flops / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+
+    tokens, factor = SHAPE_TOKENS[rec["shape"]]
+    n_active = rec.get("params_active", rec["params"])
+    model_flops_dev = factor * n_active * tokens / CHIPS
+    ratio = model_flops_dev / flops if flops else 0.0
+    step_t = max(terms.values())
+    mfu = model_flops_dev / PEAK_FLOPS / step_t if step_t else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "flops_per_dev": flops, "bytes_per_dev": mem_bytes,
+        "coll_bytes_per_dev": coll,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops_per_dev": model_flops_dev,
+        "useful_ratio": ratio,
+        "roofline_mfu": mfu,
+        "peak_gib_per_dev": rec["full"]["memory"]["peak_per_device"] / 2**30,
+        "source": src,
+    }
+
+
+def load_all(mesh="16x16"):
+    out = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        r = analyze_record(rec)
+        if r:
+            out.append(r)
+    skips = []
+    for f in sorted(DRYRUN_DIR.glob("*__skip.json")):
+        rec = json.loads(f.read_text())
+        skips.append((rec["arch"], rec["shape"], rec.get("reason", "")))
+    return out, skips
+
+
+def fmt_md(rows, skips):
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful(MODEL/HLO) | roofline MFU | peak GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_mfu']:.1%} | {r['peak_gib_per_dev']:.1f} |")
+    if skips:
+        lines.append("\nSkipped (documented in DESIGN.md §5):")
+        for a, s, why in skips:
+            lines.append(f"- {a} × {s}: {why}")
+    return "\n".join(lines)
+
+
+def fmt_csv(rows):
+    cols = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+            "bottleneck", "useful_ratio", "roofline_mfu", "peak_gib_per_dev"]
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(
+            f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    return "\n".join(lines)
+
+
+def run(csv=True):
+    rows, skips = load_all()
+    print(fmt_csv(rows) if csv else fmt_md(rows, skips))
+    return rows
+
+
+def fmt_opt_diff():
+    """Baseline vs optimized (dryrun_opt) comparison table."""
+    opt_dir = DRYRUN_DIR.parent / "dryrun_opt"
+    lines = ["| pair | term | baseline | optimized | Δ |", "|---|---|---|---|---|"]
+    for f in sorted(opt_dir.glob("*__16x16.json")):
+        opt = json.loads(f.read_text())
+        base_f = DRYRUN_DIR / f.name
+        if opt.get("status") != "OK" or not base_f.exists():
+            continue
+        base = json.loads(base_f.read_text())
+        ro, rb = analyze_record(opt), analyze_record(base)
+        pair = f"{opt['arch']} × {opt['shape']}"
+        for term, key in [("peak GiB/dev", "peak_gib_per_dev"),
+                          ("collective s", "t_collective_s"),
+                          ("memory s", "t_memory_s")]:
+            b, o = rb[key], ro[key]
+            if b <= 0:
+                continue
+            lines.append(f"| {pair} | {term} | {b:.3f} | {o:.3f} | "
+                         f"{(o / b - 1) * 100:+.0f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="baseline vs optimized diff table")
+    ap.add_argument("--out")
+    args = ap.parse_args()
+    if args.opt:
+        text = fmt_opt_diff()
+    else:
+        rows, skips = load_all()
+        text = fmt_md(rows, skips) if args.md else fmt_csv(rows)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart — the paper's own API tour (Figs. 2 & 3, §2).
+
+1. Declare an MLP with the Symbol API (Fig. 2).
+2. Imperative NDArray math with lazy engine execution (Fig. 3).
+3. Mix both: the §2.2 training loop  ``while(1){net.forward_backward();
+   net.w -= eta*net.g}``  and the §2.3 KVStore variant.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (Activation, FullyConnected, KVStoreLocal, NDArray,
+                        SoftmaxOutput, Variable, chain, reset_default_engine,
+                        sgd_updater)
+
+# --- 1. declarative Symbol (Fig. 2) ---------------------------------------
+data, label = Variable("data"), Variable("label")
+mlp = chain(data,
+            lambda x: FullyConnected(x, 64, name="fc1"),
+            lambda x: Activation(x, "relu"),
+            lambda x: FullyConnected(x, 10, name="fc2"),
+            lambda x: SoftmaxOutput(x, label))
+print("arguments:", mlp.list_arguments())
+print("output shapes:", mlp.infer_shape(
+    data=(32, 100), label=(32,), fc1_weight=(64, 100), fc1_bias=(64,),
+    fc2_weight=(10, 64), fc2_bias=(10,)))
+print("memory estimate (both heuristics):",
+      mlp[0].memory_estimate(data=(32, 100), label=(32,),
+                             fc1_weight=(64, 100), fc1_bias=(64,),
+                             fc2_weight=(10, 64), fc2_bias=(10,)))
+
+# --- 2. imperative NDArray (Fig. 3) ----------------------------------------
+eng = reset_default_engine()
+a = NDArray(np.ones((2, 3), np.float32), engine=eng)
+b = a * 2  # lazy: nothing has executed yet
+print("\n(a * 2).asnumpy():\n", b.asnumpy())  # forces the engine
+
+# --- 3. mixed training loop (§2.2 + §2.3) ---------------------------------
+rng = np.random.RandomState(0)
+X = rng.randn(256, 100).astype(np.float32)
+W = rng.randn(10, 100).astype(np.float32)
+Y = np.argmax(X @ W.T, 1).astype(np.float32)
+
+eng = reset_default_engine()
+args = {"data": X, "label": Y,
+        "fc1_weight": (rng.randn(64, 100) * 0.1).astype(np.float32),
+        "fc1_bias": np.zeros(64, np.float32),
+        "fc2_weight": (rng.randn(10, 64) * 0.1).astype(np.float32),
+        "fc2_bias": np.zeros(10, np.float32)}
+wrt = ["fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias"]
+
+kv = KVStoreLocal(eng)
+kv.set_updater(sgd_updater(lr=0.5))
+weights = {}
+for k in wrt:
+    kv.init(k, args[k])
+    weights[k] = NDArray(args[k], engine=eng, name=k)
+
+ex = mlp[0].bind({**args, **weights}, grad_wrt=wrt)
+print("\ntraining (kv.pull -> forward_backward -> kv.push), all lazy:")
+for step in range(101):
+    for k in wrt:
+        kv.pull(k, out=weights[k])
+    outs, grads = ex.forward_backward(lazy=True)
+    for k in wrt:
+        kv.push(k, grads[k])
+    if step % 25 == 0:
+        print(f"  step {step:3d} loss {float(outs[0].copy().value):.4f}")
+
+print("engine stats:", eng.stats())

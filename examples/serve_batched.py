@@ -1,0 +1,39 @@
+"""Batched multimodal serving: the internvl2 family (reduced) serving
+image+text requests — stub patch embeddings -> projector -> LM prefill ->
+batched greedy decode with KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model, reduced
+from repro.serve import ServeEngine
+
+cfg = reduced(get_config("internvl2-76b"))
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+engine = ServeEngine(cfg, params, max_len=96)
+
+rng = np.random.RandomState(0)
+BATCH, PROMPT, NEW = 4, 24, 24
+prompts = [list(rng.randint(1, cfg.vocab, PROMPT)) for _ in range(BATCH)]
+patches = np.asarray(rng.randn(BATCH, cfg.frontend_tokens, cfg.frontend_dim),
+                     np.float32)  # stub ViT output (DESIGN.md carve-out)
+
+toks, stats = engine.generate(prompts, max_new_tokens=NEW,
+                              extra_inputs={"patches": patches})
+print(f"served {BATCH} multimodal requests "
+      f"({cfg.frontend_tokens} patch tokens + {PROMPT} text tokens each)")
+print(f"prefill {stats.prefill_s*1e3:.0f} ms; decode {NEW} steps in "
+      f"{stats.decode_s*1e3:.0f} ms -> {stats.tok_per_s:.1f} tok/s")
+print("first request tokens:", toks[0][:12], "...")
+
+# determinism check (greedy)
+toks2, _ = engine.generate(prompts, max_new_tokens=NEW,
+                           extra_inputs={"patches": patches})
+assert (toks == toks2).all(), "greedy decode must be deterministic"
+print("greedy decode deterministic: OK")

@@ -1,0 +1,38 @@
+"""Config registry: ``get_config("<arch-id>")`` -> ArchConfig.
+
+One module per assigned architecture (exact dims from the assignment,
+source cited in each module docstring) plus the paper's own MLP example.
+"""
+from __future__ import annotations
+
+from repro.models.common import ArchConfig
+
+from . import (dbrx_132b, gemma2_2b, granite_20b, internvl2_76b,
+               jamba_1_5_large_398b, llama4_scout_17b_a16e, mamba2_130m,
+               qwen1_5_0_5b, starcoder2_15b, whisper_base)
+
+_MODULES = {
+    m.ARCH_ID: m
+    for m in (dbrx_132b, internvl2_76b, qwen1_5_0_5b, gemma2_2b,
+              jamba_1_5_large_398b, whisper_base, llama4_scout_17b_a16e,
+              starcoder2_15b, mamba2_130m, granite_20b)
+}
+
+ARCH_IDS = list(_MODULES)
+
+# archs whose attention is sub-quadratic-capable (run long_500k);
+# others skip it (DESIGN.md §5)
+LONG_CONTEXT_ARCHS = {"mamba2-130m", "jamba-1.5-large-398b", "gemma2-2b"}
+
+
+def get_config(arch_id: str, *, long_context: bool = False) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = _MODULES[arch_id]
+    if long_context:
+        assert arch_id in LONG_CONTEXT_ARCHS, \
+            f"{arch_id} has no sub-quadratic long-context variant"
+        import inspect
+        if "long_context" in inspect.signature(mod.config).parameters:
+            return mod.config(long_context=True)
+    return mod.config()

@@ -1,0 +1,26 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained MoE.
+[hf:databricks/dbrx-base]
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752 (per expert) vocab=100352.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "dbrx-132b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=10752,
+        vocab=100352,
+        head_dim=128,
+        n_experts=16,
+        top_k=4,
+        rope_theta=500_000.0,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="moe"),),
+    )

@@ -1,0 +1,37 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit
+soft-capping, sandwich norms, GeGLU, tied embeddings. [arXiv:2408.00118]
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000, head_dim=256,
+sliding window 4096 on local layers.
+
+``long_context=True`` returns the serving variant where the global layers
+also fall back to a 4096 sliding window — the dense-arch sub-quadratic
+carve-out required to run the ``long_500k`` shape (see DESIGN.md §5).
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "gemma2-2b"
+WINDOW = 4096
+
+
+def config(long_context: bool = False) -> ArchConfig:
+    local = LayerSpec(kind="attn", attn="window", window=WINDOW, mlp="geglu")
+    glob = (LayerSpec(kind="attn", attn="window", window=WINDOW, mlp="geglu")
+            if long_context else
+            LayerSpec(kind="attn", attn="causal", mlp="geglu"))
+    return ArchConfig(
+        name=ARCH_ID + ("-long" if long_context else ""),
+        family="dense",
+        n_layers=26,
+        d_model=2304,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=9216,
+        vocab=256000,
+        head_dim=256,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        sandwich_norm=True,
+        tie_embeddings=True,
+        pattern=(local, glob),
+    )

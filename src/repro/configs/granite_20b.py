@@ -1,0 +1,23 @@
+"""granite-20b [dense] — code model, MQA (kv=1), GELU MLP
+(gpt_bigcode-style FFN matches the 20B param count). [arXiv:2405.04324]
+
+52L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "granite-20b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=52,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_ff=24576,
+        vocab=49152,
+        head_dim=128,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="gelu"),),
+    )

@@ -1,0 +1,29 @@
+"""internvl2-76b [vlm] — InternViT (STUB frontend) + llama3-70b-style
+language backbone. [arXiv:2404.16821]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+The ViT is stubbed per spec: ``input_specs`` provides 256 pre-computed
+patch embeddings (InternViT-6B hidden=3200, pixel-shuffled 448px/14 grid),
+projected into d_model by a learned projector.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "internvl2-76b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab=128256,
+        head_dim=128,
+        rope_theta=500_000.0,
+        frontend_tokens=256,
+        frontend_dim=3200,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="swiglu"),),
+    )

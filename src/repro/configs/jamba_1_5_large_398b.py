@@ -1,0 +1,43 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave, MoE
+every other layer (16e top-2). [arXiv:2403.19887]
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 (per expert) vocab=65536,
+ssm_state=128.  Super-block of 8 layers: attention at position 4, mamba
+elsewhere; MoE on odd positions.
+
+NOTE (DESIGN.md §4): Jamba uses Mamba-1 blocks; we implement the Mamba-2
+SSD block as the TPU-native stand-in (chunked-scan formulation), same
+state size. ``long_context=True`` adds a 4096 sliding window to the
+attention layers for the ``long_500k`` decode shape.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+
+def config(long_context: bool = False) -> ArchConfig:
+    pattern = []
+    for i in range(8):
+        kind = "attn" if i == 4 else "mamba"
+        mlp = "moe" if i % 2 == 1 else "swiglu"
+        window = 4096 if (kind == "attn" and long_context) else None
+        pattern.append(LayerSpec(kind=kind,
+                                 attn="window" if window else "causal",
+                                 window=window, mlp=mlp))
+    return ArchConfig(
+        name=ARCH_ID + ("-long" if long_context else ""),
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab=65536,
+        head_dim=128,
+        n_experts=16,
+        top_k=2,
+        ssm_state=128,
+        ssm_heads=128,       # d_inner 16384 / P 128
+        ssm_expand=2,
+        pattern=tuple(pattern),
+    )

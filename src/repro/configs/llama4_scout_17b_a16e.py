@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e [moe] — 16 routed experts top-1 + shared expert,
+early-fusion multimodal (text path here; fusion enters as token stream).
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 (per expert) vocab=202048.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "llama4-scout-17b-a16e"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=202048,
+        head_dim=128,
+        n_experts=16,
+        top_k=1,
+        shared_expert=True,
+        rope_theta=500_000.0,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="moe"),),
+    )

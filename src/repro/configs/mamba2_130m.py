@@ -1,0 +1,27 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]
+
+24L d_model=768, ssm_state=128, expand=2 (d_inner=1536, head P=64 ->
+24 SSD heads), vocab=50280, tied embeddings, no MLP.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "mamba2-130m"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="ssm",
+        n_layers=24,
+        d_model=768,
+        n_heads=1,            # unused (attention-free)
+        n_kv_heads=1,
+        d_ff=0,
+        vocab=50280,
+        ssm_state=128,
+        ssm_heads=24,         # d_inner 1536 / P 64
+        ssm_expand=2,
+        tie_embeddings=True,
+        pattern=(LayerSpec(kind="mamba", mlp="none"),),
+    )

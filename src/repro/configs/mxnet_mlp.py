@@ -1,0 +1,28 @@
+"""The paper's own example model (MXNet Fig. 2): an MLP built with the
+Symbol API — used by the quickstart example and the Fig. 6/7 benchmarks."""
+from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
+                        chain)
+
+ARCH_ID = "mxnet-mlp"
+
+
+def symbol(num_hidden=(64,), num_classes=10):
+    data, label = Variable("data"), Variable("label")
+    x = data
+    for i, h in enumerate(num_hidden):
+        x = Activation(FullyConnected(x, h, name=f"fc{i}"), "relu")
+    return SoftmaxOutput(FullyConnected(x, num_classes, name="head"), label)
+
+
+def init_args(rng, batch, d_in, num_hidden=(64,), num_classes=10):
+    import numpy as np
+    args = {"data": rng.randn(batch, d_in).astype(np.float32),
+            "label": rng.randint(0, num_classes, (batch,)).astype(np.float32)}
+    d = d_in
+    for i, h in enumerate(num_hidden):
+        args[f"fc{i}_weight"] = (rng.randn(h, d) / np.sqrt(d)).astype(np.float32)
+        args[f"fc{i}_bias"] = np.zeros(h, np.float32)
+        d = h
+    args["head_weight"] = (rng.randn(num_classes, d) / np.sqrt(d)).astype(np.float32)
+    args["head_bias"] = np.zeros(num_classes, np.float32)
+    return args

@@ -1,0 +1,26 @@
+"""qwen1.5-0.5b [dense] — QKV bias, tied embeddings.
+[hf:Qwen/Qwen1.5-0.5B]
+
+24L d_model=1024 16H (GQA kv=16) d_ff=2816 vocab=151936.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "qwen1.5-0.5b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=2816,
+        vocab=151936,
+        head_dim=64,
+        qkv_bias=True,
+        tie_embeddings=True,
+        rope_theta=1_000_000.0,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="swiglu"),),
+    )

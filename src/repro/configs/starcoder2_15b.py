@@ -1,0 +1,25 @@
+"""starcoder2-15b [dense] — GQA, RoPE, GELU MLP, QKV bias.
+[arXiv:2402.19173]
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "starcoder2-15b"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="dense",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=4,
+        d_ff=24576,
+        vocab=49152,
+        head_dim=128,
+        qkv_bias=True,
+        rope_theta=100_000.0,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="gelu"),),
+    )

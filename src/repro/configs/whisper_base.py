@@ -1,0 +1,31 @@
+"""whisper-base [audio] — encoder-decoder; conv/mel frontend STUBBED per
+spec (input_specs provides 1500 precomputed frame embeddings).
+[arXiv:2212.04356]
+
+6L (decoder; +6L encoder) d_model=512 8H (kv=8) d_ff=2048 vocab=51865.
+NOTE (DESIGN.md): whisper uses learned absolute positions; we use RoPE
+(framework-uniform). decode_32k exceeds whisper's trained 448 positions —
+lowered structurally per the dry-run contract.
+"""
+from repro.models.common import ArchConfig, LayerSpec
+
+ARCH_ID = "whisper-base"
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name=ARCH_ID,
+        family="audio",
+        n_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51865,
+        head_dim=64,
+        encoder_layers=6,
+        frontend_tokens=1500,
+        frontend_dim=512,
+        pattern=(LayerSpec(kind="attn", attn="causal", mlp="gelu",
+                           cross_attn=True),),
+    )

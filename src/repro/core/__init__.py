@@ -1,0 +1,27 @@
+"""repro.core — the MXNet paper's contribution as composable JAX modules.
+
+Public API (mirrors the paper's interface, §2):
+  Symbol layer:  Variable, FullyConnected, Activation, SoftmaxOutput, chain
+  NDArray layer: NDArray, array, zeros, ones, RNG
+  Engine:        Engine, Tag, default_engine
+  KVStore:       KVStoreLocal, KVStoreDist, sgd_updater
+"""
+from .symbol import (Symbol, Variable, FullyConnected, Activation,
+                     SoftmaxOutput, Softmax, LayerNorm, chain)
+from .ndarray import NDArray, array, zeros, ones, RNG
+from .engine import Engine, Tag, default_engine, reset_default_engine
+from .executor import Executor
+from .kvstore import KVStoreLocal, KVStoreDist, sgd_updater, sum_updater
+from .autodiff import gradient, gradient_with_shapes
+from .graph import Graph, Node, NodeRef, infer_shapes
+from . import ops
+from .memplan import plan_graph, naive_bytes
+
+__all__ = [
+    "Symbol", "Variable", "FullyConnected", "Activation", "SoftmaxOutput",
+    "Softmax", "LayerNorm", "chain", "NDArray", "array", "zeros", "ones",
+    "RNG", "Engine", "Tag", "default_engine", "reset_default_engine",
+    "Executor", "KVStoreLocal", "KVStoreDist", "sgd_updater", "sum_updater",
+    "gradient", "gradient_with_shapes", "Graph", "Node", "NodeRef",
+    "infer_shapes", "ops", "plan_graph", "naive_bytes",
+]

@@ -1,0 +1,108 @@
+"""Symbolic auto-differentiation (MXNet §2.1 "backward").
+
+Builds an explicit backward *graph* from the forward graph using the
+per-operator gradient registrations — the gradients are themselves Symbols,
+so the same optimizer/memory-planner/executor machinery applies to them
+(exactly how MXNet's Fig. 4 shows a joint forward+backward graph).
+"""
+from __future__ import annotations
+
+from .graph import Graph, Node, NodeRef, infer_shapes
+from . import ops as _ops
+from .symbol import Symbol
+
+
+def gradient(sym: Symbol, wrt: list[str], out_grads: list | None = None) -> Symbol:
+    """Return a Symbol whose outputs are d(sum of sym outputs)/d(wrt).
+
+    ``out_grads``: optional NodeRefs seeding the head gradients; defaults to
+    ones_like for every head (scalar losses get grad 1.0).
+    """
+    g = Graph(sym._outputs)
+    consumers = g.consumers()
+
+    # accumulate grad contributions per (node uid, output index)
+    grads: dict[tuple[int, int], list[NodeRef]] = {}
+
+    def add_grad(ref: NodeRef, contrib: NodeRef | None):
+        if contrib is None:
+            return
+        grads.setdefault((ref.node.uid, ref.index), []).append(contrib)
+
+    for i, head in enumerate(sym._outputs):
+        if out_grads is not None and out_grads[i] is not None:
+            add_grad(head, out_grads[i])
+        else:
+            add_grad(head, _ops.GB.ones_like(head))
+
+    # Shape-dependent grad rules (broadcast unreduction etc.) receive None
+    # shapes here; rules that need them raise, directing users to
+    # gradient_with_shapes (the executor always uses that path).
+    return _build(sym, g, consumers, grads, wrt, shapes=None)
+
+
+def gradient_with_shapes(sym: Symbol, wrt: list[str],
+                         var_shapes: dict[str, tuple],
+                         out_grads: list | None = None) -> Symbol:
+    g = Graph(sym._outputs)
+    shapes, _ = infer_shapes(g, var_shapes)
+    consumers = g.consumers()
+    grads: dict[tuple[int, int], list[NodeRef]] = {}
+
+    def add_grad(ref: NodeRef, contrib):
+        if contrib is not None:
+            grads.setdefault((ref.node.uid, ref.index), []).append(contrib)
+
+    for i, head in enumerate(sym._outputs):
+        seed = out_grads[i] if out_grads else None
+        add_grad(head, seed if seed is not None else _ops.GB.ones_like(head))
+
+    return _build(sym, g, consumers, grads, wrt, shapes)
+
+
+def _build(sym: Symbol, g: Graph, consumers, grads, wrt, shapes) -> Symbol:
+    # reverse topological order
+    for node in reversed(g.nodes):
+        if node.op == "var":
+            continue
+        opdef = _ops.get(node.op)
+        # gather output grads (None where no contribution)
+        n_out = opdef.num_outputs
+        ogs = []
+        any_grad = False
+        for j in range(n_out):
+            lst = grads.get((node.uid, j))
+            if lst:
+                ogs.append(_ops.add_n(lst))
+                any_grad = True
+            else:
+                ogs.append(None)
+        if not any_grad:
+            continue
+        if opdef.grad is None:
+            raise NotImplementedError(f"no gradient registered for op {node.op}")
+        in_shapes = ([shapes[r.node.uid][r.index] for r in node.inputs]
+                     if shapes is not None else
+                     [None] * len(node.inputs))
+        in_grads = opdef.grad(_ops.GB, node, in_shapes, ogs)
+        assert len(in_grads) <= len(node.inputs)
+        for ref, ig in zip(node.inputs, in_grads):
+            if ig is not None:
+                grads.setdefault((ref.node.uid, ref.index), []).append(ig)
+
+    # collect per-variable grads
+    var_nodes = {n.name: n for n in g.variables}
+    outs = []
+    for name in wrt:
+        if name not in var_nodes:
+            # var pruned from (or never in) the graph: zero gradient, like
+            # MXNet's executor for unreached arguments
+            from .graph import Node
+            var_nodes[name] = Node("var", [], {}, name)
+        node = var_nodes[name]
+        lst = grads.get((node.uid, 0))
+        if not lst:
+            outs.append(_ops.GB.zeros_like(NodeRef(node, 0)))
+        else:
+            outs.append(_ops.add_n(lst))
+    return Symbol(outs)

@@ -1,0 +1,417 @@
+"""Executor — binds a Symbol and evaluates it through the engine (MXNet §3.1).
+
+Bind-time pipeline (mirrors the paper):
+  1. prune to the requested outputs (prediction skips backward, etc.);
+  2. pattern fusion (operator grouping) + elementwise segment fusion, each
+     fused segment compiled as ONE jitted call (the "big op" path);
+  3. shape inference;
+  4. memory planning (inplace / co-share) — buffer ids map to engine Tags so
+     buffer reuse is serialized by write-dependencies exactly as §3.2
+     describes ("easier memory reuse ... by representing updates as
+     mutations");
+  5. forward()/backward() push the scheduled ops into the dependency engine
+     lazily; results are NDArrays that force on read.
+
+A strict "poison" check validates the memory plan at runtime: every read
+asserts the buffer still holds the value planned for it.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops as _ops
+from .autodiff import gradient_with_shapes
+from .engine import Engine, Tag, default_engine
+from .graph import Graph, NodeRef, infer_shapes
+from .memplan import Unit, naive_bytes, nbytes, plan_schedule
+from .ndarray import NDArray
+from .optimize import optimize_graph, fuse_elementwise
+from .symbol import Symbol
+
+
+class Executor:
+    def __init__(self, sym: Symbol, args: dict, grad_wrt: Sequence[str] = (),
+                 optimize: bool = True, memplan: str = "both",
+                 engine: Engine | None = None, jit_segments: bool = True,
+                 check_plan: bool = True, compile_whole: bool = False):
+        self.engine = engine or default_engine()
+        self.sym = sym
+        self.grad_wrt = list(grad_wrt)
+        self.jit_segments = jit_segments
+        self.check_plan = check_plan and not compile_whole
+        # compile_whole: the planned forward (and backward) schedules each
+        # become ONE jitted XLA program — the CPU/XLA analogue of executing
+        # MXNet's planned graph with compiled kernels.  The engine still
+        # schedules the two composites + imperative ops jointly.
+        self.compile_whole = compile_whole
+
+        # normalize args to NDArray
+        self.args: dict[str, NDArray] = {}
+        for k, v in args.items():
+            self.args[k] = v if isinstance(v, NDArray) else NDArray(v, engine=self.engine,
+                                                                    name=k)
+        var_shapes = {k: tuple(v.shape) for k, v in self.args.items()}
+        var_dtypes = {k: str(v.dtype) for k, v in self.args.items()}
+
+        # ---- joint forward(+backward) graph
+        self.n_fwd_outputs = len(sym._outputs)
+        heads = list(sym._outputs)
+        if self.grad_wrt:
+            gsym = gradient_with_shapes(sym, self.grad_wrt, var_shapes)
+            heads = heads + list(gsym._outputs)
+
+        g = optimize_graph(heads, enable_pattern=optimize)
+        self.graph = g
+        self.shapes, self.dtypes = infer_shapes(g, var_shapes, var_dtypes)
+
+        # ---- fusion
+        if optimize:
+            self.segments, self.node2seg = fuse_elementwise(g)
+        else:
+            self.segments, self.node2seg = {}, {}
+
+        # ---- split schedule into forward / backward portions (before
+        # planning: memory is planned over the ACTUAL unit schedule, so
+        # deferred fused segments keep their inputs alive)
+        fwd_needed = set()
+        stack = [r.node for r in g.outputs[:self.n_fwd_outputs]]
+        while stack:
+            n = stack.pop()
+            if n.uid in fwd_needed:
+                continue
+            fwd_needed.add(n.uid)
+            stack.extend(r.node for r in n.inputs)
+        self._fwd_sched, self._bwd_sched = self._build_schedule(fwd_needed)
+
+        # ---- memory plan (buffer accounting + reuse constraints)
+        units, ext = self._schedule_units(g)
+        self.plan = plan_schedule(units, ext, strategy=memplan)
+        self.naive_bytes = naive_bytes(g, self.shapes, self.dtypes)
+
+        # engine tags: one per buffer (internal) / per arg or output
+        self._buffer_tags: dict[int, Tag] = {}
+        self._key_tag: dict[tuple[int, int], Tag] = {}
+        out_keys = [(r.node.uid, r.index) for r in g.outputs]
+        self._out_keys = out_keys
+        var_nodes = {n.name: n for n in g.variables}
+        self.var_nodes = var_nodes
+
+        for key, bid in self.plan.assignment.items():
+            if bid >= 0:
+                self._buffer_tags.setdefault(bid, Tag(f"buf{bid}"))
+                self._key_tag[key] = self._buffer_tags[bid]
+            else:
+                self._key_tag[key] = Tag(f"ext{key[0]}_{key[1]}")
+        for name, n in var_nodes.items():
+            if name in self.args:
+                self._key_tag[(n.uid, 0)] = self.args[name].tag
+
+        # ---- runtime value env + plan validation state
+        self._env: dict[tuple[int, int], Any] = {}
+        self._buffer_owner: dict[int, tuple[int, int]] = {}
+
+        # output handles
+        self.outputs: list[NDArray] = []
+        for i, r in enumerate(g.outputs[:self.n_fwd_outputs]):
+            h = NDArray(engine=self.engine, name=f"out{i}")
+            h.shape = self.shapes[r.node.uid][r.index]
+            h.dtype = self.dtypes[r.node.uid][r.index]
+            self.outputs.append(h)
+        self.grad_arrays: dict[str, NDArray] = {}
+        for name, r in zip(self.grad_wrt, g.outputs[self.n_fwd_outputs:]):
+            h = NDArray(engine=self.engine, name=f"grad_{name}")
+            h.shape = self.shapes[r.node.uid][r.index]
+            h.dtype = self.dtypes[r.node.uid][r.index]
+            self.grad_arrays[name] = h
+
+        self._jit_cache: dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _schedule_units(self, g):
+        """Execution units (in actual run order) for memory planning."""
+        external = {(n.uid, 0) for n in g.variables}
+        external |= {(r.node.uid, r.index) for r in g.outputs}
+        units = []
+        for kind, payload in list(self._fwd_sched) + list(self._bwd_sched):
+            if kind == "node":
+                node = payload
+                opdef = _ops.get(node.op)
+                in_keys = [(r.node.uid, r.index) for r in node.inputs]
+                out_keys = [(node.uid, j) for j in range(opdef.num_outputs)]
+                out_sizes = [nbytes(sh, dt) for sh, dt in
+                             zip(self.shapes[node.uid], self.dtypes[node.uid])]
+                units.append(Unit(node.uid, in_keys, out_keys, out_sizes,
+                                  inplace=opdef.inplace))
+            else:
+                seg = self.segments[payload]
+                in_keys = [(r.node.uid, r.index) for r in seg.ext_inputs]
+                out_keys = [(r.node.uid, r.index) for r in seg.ext_outputs]
+                out_sizes = [nbytes(self.shapes[r.node.uid][r.index],
+                                    self.dtypes[r.node.uid][r.index])
+                             for r in seg.ext_outputs]
+                # elementwise segments: any dying input may host any
+                # size-matching output (atomic unit => safe)
+                inplace = tuple((i, j) for j in range(len(out_keys))
+                                for i in range(len(in_keys)))
+                units.append(Unit(seg.nodes[-1].uid, in_keys, out_keys,
+                                  out_sizes, inplace=inplace))
+        return units, external
+
+    # ------------------------------------------------------------------
+    def _build_schedule(self, fwd_needed: set[int]):
+        """Units = fused segments (emitted at last member) or single nodes."""
+        fwd, bwd = [], []
+        emitted_segs = set()
+        seg_last = {}
+        for n in self.graph.nodes:
+            sid = self.node2seg.get(n.uid)
+            if sid is not None:
+                seg_last[sid] = n.uid
+        for n in self.graph.nodes:
+            if n.op == "var":
+                continue
+            sid = self.node2seg.get(n.uid)
+            if sid is not None:
+                if seg_last[sid] != n.uid or sid in emitted_segs:
+                    continue
+                emitted_segs.add(sid)
+                unit = ("seg", sid)
+                is_fwd = all(m.uid in fwd_needed for m in self.segments[sid].nodes)
+            else:
+                unit = ("node", n)
+                is_fwd = n.uid in fwd_needed
+            (fwd if is_fwd else bwd).append(unit)
+        return fwd, bwd
+
+    # ------------------------------------------------------------------
+    def _read(self, key):
+        if self.check_plan:
+            bid = self.plan.assignment.get(key)
+            if bid is not None and bid >= 0:
+                owner = self._buffer_owner.get(bid)
+                assert owner == key, (
+                    f"memory-plan violation: buffer {bid} holds {owner}, "
+                    f"read wanted {key}")
+        return self._env[key]
+
+    def _write(self, key, value):
+        self._env[key] = value
+        if self.check_plan:
+            bid = self.plan.assignment.get(key)
+            if bid is not None and bid >= 0:
+                self._buffer_owner[bid] = key
+
+    def _push_unit(self, unit):
+        kind, payload = unit
+        if kind == "node":
+            node = payload
+            opdef = _ops.get(node.op)
+            in_keys = [(r.node.uid, r.index) for r in node.inputs]
+            out_keys = [(node.uid, j) for j in range(opdef.num_outputs)]
+            read_tags = [self._tag_for_input(r) for r in node.inputs]
+            write_tags = [self._key_tag[k] for k in out_keys]
+
+            def fn(node=node, opdef=opdef, in_keys=in_keys, out_keys=out_keys):
+                ins = [self._fetch(r, k) for r, k in zip(node.inputs, in_keys)]
+                outs = opdef.compute(ins, node.attrs)
+                for k, v in zip(out_keys, outs):
+                    self._write(k, v)
+            self.engine.push(fn, reads=read_tags, writes=write_tags, name=node.op)
+        else:
+            seg = self.segments[payload]
+            run = self._jit_for(payload, seg)
+            in_refs = seg.ext_inputs
+            in_keys = [(r.node.uid, r.index) for r in in_refs]
+            out_keys = [(r.node.uid, r.index) for r in seg.ext_outputs]
+            read_tags = [self._tag_for_input(r) for r in in_refs]
+            write_tags = [self._key_tag[k] for k in out_keys]
+
+            def fn(run=run, in_refs=in_refs, in_keys=in_keys, out_keys=out_keys):
+                ins = [self._fetch(r, k) for r, k in zip(in_refs, in_keys)]
+                outs = run(*ins)
+                for k, v in zip(out_keys, outs):
+                    self._write(k, v)
+            self.engine.push(fn, reads=read_tags, writes=write_tags,
+                             name=f"fused{payload}x{len(seg.nodes)}")
+
+    def _tag_for_input(self, ref: NodeRef) -> Tag:
+        key = (ref.node.uid, ref.index)
+        return self._key_tag[key]
+
+    def _fetch(self, ref: NodeRef, key):
+        node = ref.node
+        if node.op == "var":
+            return self.args[node.name]._value
+        return self._read(key)
+
+    def _jit_for(self, sid, seg):
+        if sid not in self._jit_cache:
+            fn = seg.make_callable()
+            self._jit_cache[sid] = jax.jit(fn) if self.jit_segments else fn
+        return self._jit_cache[sid]
+
+    # ------------------------------------------------------------------
+    # whole-graph compilation
+
+    def _unit_apply(self, unit, env, var_vals):
+        """Execute one schedule unit on a (traced) value dict."""
+        kind, payload = unit
+        if kind == "node":
+            node = payload
+            opdef = _ops.get(node.op)
+            ins = [var_vals[r.node.name] if r.node.op == "var"
+                   else env[(r.node.uid, r.index)] for r in node.inputs]
+            outs = opdef.compute(ins, node.attrs)
+            for j, v in enumerate(outs):
+                env[(node.uid, j)] = v
+        else:
+            seg = self.segments[payload]
+            run = seg.make_callable()
+            ins = [var_vals[r.node.name] if r.node.op == "var"
+                   else env[(r.node.uid, r.index)] for r in seg.ext_inputs]
+            outs = run(*ins)
+            for r, v in zip(seg.ext_outputs, outs):
+                env[(r.node.uid, r.index)] = v
+
+    def _whole_fns(self):
+        if hasattr(self, "_whole_cache"):
+            return self._whole_cache
+        # boundary: fwd-produced keys read by the backward schedule or
+        # published as outputs
+        bwd_reads = set()
+        for kind, payload in self._bwd_sched:
+            refs = (payload.inputs if kind == "node"
+                    else self.segments[payload].ext_inputs)
+            for r in refs:
+                if r.node.op != "var":
+                    bwd_reads.add((r.node.uid, r.index))
+        fwd_writes = set()
+        for kind, payload in self._fwd_sched:
+            if kind == "node":
+                n_out = _ops.get(payload.op).num_outputs
+                fwd_writes |= {(payload.uid, j) for j in range(n_out)}
+            else:
+                fwd_writes |= {(r.node.uid, r.index)
+                               for r in self.segments[payload].ext_outputs}
+        out_keys = list(self._out_keys[:self.n_fwd_outputs])
+        exports = sorted((bwd_reads & fwd_writes)
+                         | {k for k in out_keys if k in fwd_writes})
+
+        fwd_sched, bwd_sched = self._fwd_sched, self._bwd_sched
+        node_map = {n.uid: n for n in self.graph.nodes}
+
+        def fwd_fn(var_vals):
+            env = {}
+            for unit in fwd_sched:
+                self._unit_apply(unit, env, var_vals)
+            outs = []
+            for key in out_keys:
+                n = node_map[key[0]]
+                outs.append(var_vals[n.name] if n.op == "var" else env[key])
+            return tuple(outs), {f"{k[0]}_{k[1]}": env[k] for k in exports}
+
+        grad_keys = list(self._out_keys[self.n_fwd_outputs:])
+
+        def bwd_fn(var_vals, saved):
+            env = {(int(s.split("_")[0]), int(s.split("_")[1])): v
+                   for s, v in saved.items()}
+            for unit in bwd_sched:
+                self._unit_apply(unit, env, var_vals)
+            return tuple(env[k] if k[0] in node_map
+                         and node_map[k[0]].op != "var"
+                         else var_vals[node_map[k[0]].name]
+                         for k in grad_keys)
+
+        self._whole_cache = (jax.jit(fwd_fn), jax.jit(bwd_fn))
+        return self._whole_cache
+
+    def _forward_whole(self, lazy):
+        fwd_fn, _ = self._whole_fns()
+
+        def run():
+            var_vals = {k: a._value for k, a in self.args.items()}
+            outs, saved = fwd_fn(var_vals)
+            self._saved = saved
+            for h, v in zip(self.outputs, outs):
+                h._set(v)
+        self.engine.push(
+            run, reads=[a.tag for a in self.args.values()],
+            writes=[h.tag for h in self.outputs], name="fwd_graph")
+        if lazy:
+            return self.outputs
+        return [o.value for o in self.outputs]
+
+    def _backward_whole(self, lazy):
+        _, bwd_fn = self._whole_fns()
+
+        def run():
+            var_vals = {k: a._value for k, a in self.args.items()}
+            grads = bwd_fn(var_vals, self._saved)
+            for name, g in zip(self.grad_wrt, grads):
+                self.grad_arrays[name]._set(g)
+        self.engine.push(
+            run, reads=[a.tag for a in self.args.values()],
+            writes=[self.grad_arrays[n].tag for n in self.grad_wrt],
+            name="bwd_graph")
+        if lazy:
+            return self.grad_arrays
+        return {k: v.value for k, v in self.grad_arrays.items()}
+
+    # ------------------------------------------------------------------
+    def forward(self, lazy: bool = False, **new_args):
+        for k, v in new_args.items():
+            self.args[k].assign(v)
+        if self.compile_whole:
+            return self._forward_whole(lazy)
+        for unit in self._fwd_sched:
+            self._push_unit(unit)
+        # publish outputs as NDArray handles
+        for h, key in zip(self.outputs, self._out_keys[:self.n_fwd_outputs]):
+            self.engine.push(lambda h=h, key=key: h._set(self._read_pub(key)),
+                             reads=(self._key_tag[key],), writes=(h.tag,),
+                             name="publish")
+        if lazy:
+            return self.outputs
+        return [o.value for o in self.outputs]
+
+    def _read_pub(self, key):
+        node_map = {n.uid: n for n in self.graph.nodes}
+        n = node_map[key[0]]
+        if n.op == "var":
+            return self.args[n.name]._value
+        return self._read(key)
+
+    def backward(self, lazy: bool = False):
+        assert self.grad_wrt, "bind with grad_wrt to use backward()"
+        if self.compile_whole:
+            return self._backward_whole(lazy)
+        for unit in self._bwd_sched:
+            self._push_unit(unit)
+        for name, key in zip(self.grad_wrt,
+                             self._out_keys[self.n_fwd_outputs:]):
+            h = self.grad_arrays[name]
+            self.engine.push(lambda h=h, key=key: h._set(self._read_pub(key)),
+                             reads=(self._key_tag[key],), writes=(h.tag,),
+                             name=f"publish_grad")
+        if lazy:
+            return self.grad_arrays
+        return {k: v.value for k, v in self.grad_arrays.items()}
+
+    def forward_backward(self, lazy: bool = True, **new_args):
+        outs = self.forward(lazy=True, **new_args)
+        grads = self.backward(lazy=True)
+        if lazy:
+            return outs, grads
+        return [o.value for o in outs], {k: v.value for k, v in grads.items()}
+
+    # ------------------------------------------------------------------
+    def memory_stats(self) -> dict:
+        s = self.plan.stats()
+        s["naive_bytes"] = self.naive_bytes
+        s["reduction"] = (self.naive_bytes / s["internal_bytes"]
+                          if s["internal_bytes"] else float("inf"))
+        return s

@@ -1,0 +1,122 @@
+"""Computation-graph IR — the substrate under Symbol (MXNet §3.1).
+
+A :class:`Node` applies a registered operator to the outputs of other nodes.
+Shape/dtype inference is deferred (as in MXNet) until bind time, when the
+free variables' shapes are known.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Callable, Iterable, NamedTuple
+
+_node_counter = itertools.count()
+
+
+class NodeRef(NamedTuple):
+    """Reference to one output of a node (operators can be multi-output)."""
+
+    node: "Node"
+    index: int = 0
+
+
+class Node:
+    __slots__ = ("uid", "op", "name", "inputs", "attrs")
+
+    def __init__(self, op: str, inputs: list[NodeRef], attrs: dict | None = None,
+                 name: str | None = None):
+        self.uid = next(_node_counter)
+        self.op = op
+        self.inputs = list(inputs)
+        self.attrs = dict(attrs or {})
+        self.name = name or f"{op}{self.uid}"
+
+    def __repr__(self):
+        ins = ",".join(f"{r.node.name}[{r.index}]" for r in self.inputs)
+        return f"<Node {self.name}:{self.op}({ins})>"
+
+
+def topo_sort(outputs: Iterable[NodeRef]) -> list[Node]:
+    """Deterministic post-order topological sort of the ancestor set."""
+    order: list[Node] = []
+    state: dict[int, int] = {}  # uid -> 0 visiting, 1 done
+    stack: list[tuple[Node, bool]] = [(r.node, False) for r in outputs][::-1]
+    seen_push = set()
+    while stack:
+        node, processed = stack.pop()
+        if processed:
+            if state.get(node.uid) != 1:
+                state[node.uid] = 1
+                order.append(node)
+            continue
+        if node.uid in state:
+            continue
+        if node.uid in seen_push:
+            # children done
+            state[node.uid] = 1
+            order.append(node)
+            continue
+        seen_push.add(node.uid)
+        stack.append((node, True))
+        for ref in reversed(node.inputs):
+            if ref.node.uid not in state:
+                stack.append((ref.node, False))
+    return order
+
+
+class Graph:
+    """A bound set of outputs plus the topologically-sorted ancestor closure."""
+
+    def __init__(self, outputs: list[NodeRef]):
+        self.outputs = list(outputs)
+        self.nodes = topo_sort(self.outputs)
+
+    @property
+    def variables(self) -> list[Node]:
+        return [n for n in self.nodes if n.op == "var"]
+
+    def consumers(self) -> dict[int, list[tuple[Node, int]]]:
+        """uid -> list of (consumer node, which input slot)."""
+        out: dict[int, list[tuple[Node, int]]] = {n.uid: [] for n in self.nodes}
+        for n in self.nodes:
+            for slot, ref in enumerate(n.inputs):
+                out[ref.node.uid].append((n, slot))
+        return out
+
+    def __len__(self):
+        return len(self.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Shape & dtype inference
+
+
+def infer_shapes(graph: Graph, var_shapes: dict[str, tuple[int, ...]],
+                 var_dtypes: dict[str, Any] | None = None):
+    """Propagate shapes/dtypes through the graph.
+
+    Returns (shapes, dtypes): dict uid -> tuple-of-shapes / tuple-of-dtypes,
+    one entry per node output.
+    """
+    from . import ops as _ops  # late import: registry
+
+    var_dtypes = var_dtypes or {}
+    shapes: dict[int, tuple] = {}
+    dtypes: dict[int, tuple] = {}
+    for node in graph.nodes:
+        if node.op == "var":
+            if node.name not in var_shapes:
+                raise ValueError(f"missing shape for free variable {node.name!r}")
+            shapes[node.uid] = (tuple(var_shapes[node.name]),)
+            dtypes[node.uid] = (var_dtypes.get(node.name, "float32"),)
+            continue
+        opdef = _ops.get(node.op)
+        in_shapes = [shapes[r.node.uid][r.index] for r in node.inputs]
+        in_dtypes = [dtypes[r.node.uid][r.index] for r in node.inputs]
+        out_sh = opdef.infer(in_shapes, node.attrs)
+        shapes[node.uid] = tuple(tuple(s) for s in out_sh)
+        if opdef.infer_dtype is not None:
+            dtypes[node.uid] = tuple(opdef.infer_dtype(in_dtypes, node.attrs))
+        else:
+            dtypes[node.uid] = tuple(in_dtypes[0] if in_dtypes else "float32"
+                                     for _ in out_sh)
+    return shapes, dtypes

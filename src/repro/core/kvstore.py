@@ -1,0 +1,194 @@
+"""KVStore — data synchronization over devices (MXNet §2.3, §3.3).
+
+Primitives: ``push(key, grad)`` and ``pull(key) -> value`` with a
+user-registered *updater* that merges pushed values into the stored one.
+Consistency between workers is controlled by a consistency model:
+
+* ``sequential`` — a push is an atomic barrier-ed reduction: all workers'
+  step-*t* gradients are aggregated before any worker's step-*t+1* pull
+  returns (synchronous data parallelism);
+* ``eventual``  — pushes apply asynchronously; pulls may return values up to
+  ``staleness`` versions old (asynchronous SGD).
+
+Two-level topology (§3.3): a level-1 server aggregates gradients *within* a
+machine (sum over local devices — one outbound message per machine), a
+level-2 server aggregates *across* machines.  This reduces inter-machine
+bytes by a factor of devices-per-machine; ``bytes_l1``/``bytes_l2`` account
+for it and are validated by tests and the Fig. 8 benchmark.
+
+All store traffic is scheduled through the dependency engine, so pushes and
+pulls interleave correctly with computation (the paper's
+``while(1){kv.pull; net.forward_backward(); kv.push}`` loop is lazy
+end-to-end).
+
+The *production on-mesh mapping* of this two-level structure (hierarchical
+reduce-scatter/all-reduce/all-gather over a (pod, data, model) TPU mesh)
+lives in ``repro.dist.collectives``.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, Tag, default_engine
+from .ndarray import NDArray
+
+
+def sgd_updater(lr: float) -> Callable:
+    def update(key, stored, pushed):
+        return stored - lr * pushed
+    return update
+
+
+def sum_updater():
+    def update(key, stored, pushed):
+        return stored + pushed
+    return update
+
+
+class KVStoreLocal:
+    """Single-process store: aggregates pushes from local devices (level-1)."""
+
+    def __init__(self, engine: Engine | None = None):
+        self.engine = engine or default_engine()
+        self._store: dict[str, NDArray] = {}
+        self._updater: Callable = lambda key, stored, pushed: stored + pushed
+        self.bytes_pushed = 0
+
+    def set_updater(self, fn: Callable):
+        self._updater = fn
+
+    def init(self, key: str, value):
+        arr = value if isinstance(value, NDArray) else NDArray(value,
+                                                               engine=self.engine,
+                                                               name=f"kv_{key}")
+        self._store[key] = arr
+
+    def keys(self):
+        return list(self._store)
+
+    def push(self, key: str, values):
+        """values: NDArray or list of NDArrays (one per local device)."""
+        if not isinstance(values, (list, tuple)):
+            values = [values]
+        stored = self._store[key]
+        read_tags = [v.tag for v in values]
+        self.bytes_pushed += sum(
+            int(np.prod(v.shape)) * 4 for v in values)
+
+        def fn(stored=stored, values=values, key=key):
+            agg = values[0]._value
+            for v in values[1:]:
+                agg = agg + v._value  # level-1 aggregation
+            stored._set(self._updater(key, stored._value, agg))
+        self.engine.push(fn, reads=read_tags, writes=(stored.tag,),
+                         name=f"kv_push_{key}")
+
+    def pull(self, key: str, out: NDArray | None = None) -> NDArray:
+        stored = self._store[key]
+        out = out or NDArray(engine=self.engine, name=f"kv_pull_{key}")
+        out.shape, out.dtype = stored.shape, stored.dtype
+        self.engine.push(lambda: out._set(stored._value),
+                         reads=(stored.tag,), writes=(out.tag,),
+                         name=f"kv_pull_{key}")
+        return out
+
+
+class KVStoreDist:
+    """Multi-worker simulation of the two-level distributed store.
+
+    ``n_machines`` level-1 servers × ``devices_per_machine`` devices each.
+    Worker w = (machine m, device d).  Byte counters model the paper's
+    claim that level-1 aggregation reduces inter-machine bandwidth.
+    """
+
+    def __init__(self, n_machines: int, devices_per_machine: int = 1,
+                 consistency: str = "sequential", staleness: int = 1,
+                 engine: Engine | None = None):
+        assert consistency in ("sequential", "eventual")
+        self.engine = engine or default_engine()
+        self.n_machines = n_machines
+        self.devices_per_machine = devices_per_machine
+        self.n_workers = n_machines * devices_per_machine
+        self.consistency = consistency
+        self.staleness = staleness
+        self._updater = lambda key, stored, pushed: stored + pushed
+        self._value: dict[str, jnp.ndarray] = {}          # level-2 (global)
+        self._version: dict[str, int] = {}
+        self._history: dict[str, list] = defaultdict(list)  # for staleness
+        self._pending: dict[str, dict[int, list]] = defaultdict(dict)
+        self.bytes_l1 = 0  # device -> level-1 server (intra-machine)
+        self.bytes_l2 = 0  # level-1 -> level-2 (inter-machine)
+
+    def set_updater(self, fn: Callable):
+        self._updater = fn
+
+    def init(self, key: str, value):
+        v = jnp.asarray(value)
+        self._value[key] = v
+        self._version[key] = 0
+        self._history[key] = [v]
+
+    def keys(self):
+        return list(self._value)
+
+    # -- worker API ---------------------------------------------------------
+    def push(self, key: str, worker: int, grad):
+        """Queue worker's gradient; applies when the machine set completes
+        (sequential) or immediately per-machine (eventual)."""
+        g = grad._value if isinstance(grad, NDArray) else jnp.asarray(grad)
+        m = worker // self.devices_per_machine
+        nb = int(np.prod(g.shape)) * 4
+        self.bytes_l1 += nb
+        pend = self._pending[key]
+        pend.setdefault(m, [])
+        pend[m].append(g)
+
+        if self.consistency == "eventual":
+            # machine-complete? flush that machine's level-1 aggregate up
+            if len(pend[m]) == self.devices_per_machine:
+                agg = pend.pop(m)
+                total = agg[0]
+                for x in agg[1:]:
+                    total = total + x
+                self.bytes_l2 += nb
+                self._apply(key, total)
+        else:
+            # sequential: wait for ALL machines' full sets, then one update
+            if all(len(pend.get(mm, [])) >= self.devices_per_machine
+                   for mm in range(self.n_machines)):
+                total = None
+                for mm in range(self.n_machines):
+                    gs = pend[mm][:self.devices_per_machine]
+                    pend[mm] = pend[mm][self.devices_per_machine:]
+                    l1 = gs[0]
+                    for x in gs[1:]:
+                        l1 = l1 + x          # level-1 aggregate
+                    self.bytes_l2 += nb      # one message per machine
+                    total = l1 if total is None else total + l1
+                self._apply(key, total)
+                self._pending[key] = {mm: v for mm, v in pend.items() if v}
+
+    def _apply(self, key, agg):
+        self._value[key] = self._updater(key, self._value[key], agg)
+        self._version[key] += 1
+        h = self._history[key]
+        h.append(self._value[key])
+        if len(h) > self.staleness + 2:
+            del h[: len(h) - (self.staleness + 2)]
+
+    def pull(self, key: str, worker: int = 0):
+        if self.consistency == "eventual" and self.staleness > 0:
+            h = self._history[key]
+            # deterministic bounded staleness: workers on machine 0 see fresh
+            # values, later machines see progressively staler ones
+            m = worker // self.devices_per_machine
+            lag = min(m % (self.staleness + 1), len(h) - 1)
+            return h[-1 - lag]
+        return self._value[key]
+
+    def version(self, key: str) -> int:
+        return self._version[key]

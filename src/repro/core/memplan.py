@@ -1,0 +1,211 @@
+"""Memory allocation for computation graphs (MXNet §3.1 "Memory Allocation").
+
+Each internal variable's lifetime is known statically from the graph, so
+buffers can be shared between variables whose lifetimes do not intersect.
+The optimal assignment is quadratic; the paper proposes two linear-time
+heuristics which we implement faithfully:
+
+* ``inplace``  — simulate graph traversal keeping a reference count of
+  consumers not yet executed; when an op's input refcount drops to zero at
+  the op itself AND the op is registered inplace-capable for that input,
+  the output is written into the input's buffer.
+* ``co-share`` — two nodes may share a buffer iff they cannot run in
+  parallel.  We recycle buffers through a free pool keyed by size when the
+  refcount reaches zero; every reuse adds a serialization constraint
+  (recorded in ``plan.constraints`` and honoured by the dependency engine
+  via write-tags on buffers).
+
+Strategies: ``naive`` (no sharing), ``inplace``, ``coshare``, ``both``.
+``benchmarks/bench_memory.py`` reproduces Fig. 7 with these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .graph import Graph, NodeRef
+from . import ops as _ops
+
+_DTYPE_BYTES = {"float32": 4, "float64": 8, "float16": 2, "bfloat16": 2,
+                "int32": 4, "int64": 8, "bool": 1, "int8": 1, "uint8": 1}
+
+
+def nbytes(shape, dtype) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * _DTYPE_BYTES.get(str(dtype), 4)
+
+
+@dataclass
+class Buffer:
+    bid: int
+    size: int
+
+
+@dataclass
+class MemPlan:
+    # (uid, out_idx) -> buffer id;  external (vars, outputs) get bid = -uid-1
+    assignment: dict[tuple[int, int], int]
+    buffers: dict[int, Buffer]
+    external: set[tuple[int, int]]
+    constraints: list[tuple[int, int]] = field(default_factory=list)  # (uid_before, uid_after)
+    inplace_pairs: list[tuple[int, int]] = field(default_factory=list)
+
+    def internal_bytes(self) -> int:
+        return sum(b.size for b in self.buffers.values())
+
+    def stats(self) -> dict:
+        return {
+            "internal_bytes": self.internal_bytes(),
+            "n_buffers": len(self.buffers),
+            "n_inplace": len(self.inplace_pairs),
+            "n_constraints": len(self.constraints),
+        }
+
+
+@dataclass
+class Unit:
+    """One schedulable execution unit: a plain node or a fused segment.
+
+    ``in_keys``/``out_keys`` are (uid, out_idx) value identifiers;
+    ``out_sizes`` parallel bytes; ``inplace`` = (input_pos, output_pos)
+    candidate pairs whose buffers may be unified when the input dies here.
+    """
+    uid: int
+    in_keys: list
+    out_keys: list
+    out_sizes: list
+    inplace: tuple = ()
+
+
+def plan_schedule(units: list[Unit], external: set,
+                  strategy: str = "both") -> MemPlan:
+    """Linear-time buffer assignment over an execution schedule (§3.1).
+
+    The schedule — not the raw graph — is planned, so deferred fused
+    segments see buffers kept alive until they actually run.
+    """
+    assert strategy in ("naive", "inplace", "coshare", "both")
+    use_inplace = strategy in ("inplace", "both")
+    use_coshare = strategy in ("coshare", "both")
+
+    refcount: dict[tuple[int, int], int] = {}
+    for u in units:
+        for k in u.in_keys:
+            refcount[k] = refcount.get(k, 0) + 1
+
+    assignment: dict[tuple[int, int], int] = {}
+    buffers: dict[int, Buffer] = {}
+    free_pool: dict[int, list[int]] = {}
+    last_user: dict[int, int] = {}
+    constraints: list[tuple[int, int]] = []
+    inplace_pairs: list[tuple[int, int]] = []
+    next_bid = [0]
+    next_ext = [-1]
+
+    def fresh(size: int) -> int:
+        bid = next_bid[0]
+        next_bid[0] += 1
+        buffers[bid] = Buffer(bid, size)
+        return bid
+
+    for u in units:
+        dying = []
+        for k in u.in_keys:
+            refcount[k] -= 1
+            if refcount[k] == 0 and k not in external:
+                dying.append(k)
+
+        used_inplace: set[tuple[int, int]] = set()
+        for j, (key, size) in enumerate(zip(u.out_keys, u.out_sizes)):
+            if key in external:
+                assignment[key] = next_ext[0]
+                next_ext[0] -= 1
+                continue
+            bid = None
+            if use_inplace:
+                for (ii, oo) in u.inplace:
+                    if oo != j or ii >= len(u.in_keys):
+                        continue
+                    k = u.in_keys[ii]
+                    if k in dying and k in assignment and k not in used_inplace:
+                        cand = assignment[k]
+                        if cand >= 0 and buffers[cand].size == size:
+                            bid = cand
+                            used_inplace.add(k)
+                            inplace_pairs.append((k[0], u.uid))
+                            break
+            if bid is None and use_coshare:
+                pool = free_pool.get(size)
+                if pool:
+                    bid = pool.pop()
+                    constraints.append((last_user[bid], u.uid))
+            if bid is None:
+                bid = fresh(size)
+            assignment[key] = bid
+            last_user[bid] = u.uid
+
+        for k in dying:
+            if k in used_inplace or k not in assignment:
+                continue
+            bid = assignment[k]
+            if bid >= 0:
+                free_pool.setdefault(buffers[bid].size, []).append(bid)
+                last_user[bid] = u.uid
+        for key, size in zip(u.out_keys, u.out_sizes):
+            if key in external or refcount.get(key, 0) > 0:
+                continue
+            bid = assignment[key]
+            if bid >= 0:
+                free_pool.setdefault(buffers[bid].size, []).append(bid)
+
+    return MemPlan(assignment, buffers, external, constraints, inplace_pairs)
+
+
+def units_from_graph(graph: Graph, shapes, dtypes) -> tuple[list[Unit], set]:
+    """Per-node units in topo order (the no-fusion schedule)."""
+    external = {(n.uid, 0) for n in graph.variables}
+    external |= {(r.node.uid, r.index) for r in graph.outputs}
+    units = []
+    for node in graph.nodes:
+        if node.op == "var":
+            continue
+        opdef = _ops.get(node.op)
+        in_keys = [(r.node.uid, r.index) for r in node.inputs]
+        out_keys = [(node.uid, j) for j in range(opdef.num_outputs)]
+        out_sizes = [nbytes(sh, dt) for sh, dt in
+                     zip(shapes[node.uid], dtypes[node.uid])]
+        units.append(Unit(node.uid, in_keys, out_keys, out_sizes,
+                          inplace=opdef.inplace))
+    return units, external
+
+
+def plan_graph(graph: Graph, shapes: dict, dtypes: dict,
+               strategy: str = "both",
+               external: set[tuple[int, int]] | None = None) -> MemPlan:
+    """Assign buffers to every internal node output (per-node schedule).
+
+    ``external``: (uid, idx) pairs that own storage outside the plan
+    (free variables always; graph outputs by default — they are returned to
+    the user, mirroring Fig. 7's "internal variables except the outputs").
+    """
+    units, ext = units_from_graph(graph, shapes, dtypes)
+    if external:
+        ext |= set(external)
+    return plan_schedule(units, ext, strategy=strategy)
+
+
+def naive_bytes(graph: Graph, shapes, dtypes) -> int:
+    """Sum of all internal node outputs with no sharing (the Fig. 7 baseline)."""
+    ext = {(n.uid, 0) for n in graph.variables}
+    ext |= {(r.node.uid, r.index) for r in graph.outputs}
+    total = 0
+    for n in graph.nodes:
+        if n.op == "var":
+            continue
+        for j, (sh, dt) in enumerate(zip(shapes[n.uid], dtypes[n.uid])):
+            if (n.uid, j) not in ext:
+                total += nbytes(sh, dt)
+    return total

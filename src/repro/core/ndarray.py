@@ -1,0 +1,154 @@
+"""NDArray — imperative, lazily-evaluated tensors (MXNet §2.2).
+
+Operations on NDArrays are pushed to the dependency engine instead of being
+executed eagerly; ``asnumpy()`` (or any read of ``.value``) flushes.  This
+lets imperative statements like ``w -= lr * g`` interleave with symbolic
+executor calls *and* KVStore communication under one scheduler, which is the
+paper's central flexibility claim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import Engine, Tag, default_engine
+
+
+class NDArray:
+    def __init__(self, value=None, engine: Engine | None = None, name: str = "",
+                 shape=None, dtype=None):
+        self.engine = engine or default_engine()
+        self.tag = Tag(name or "ndarray")
+        self._value = None
+        self.shape = tuple(shape) if shape is not None else None
+        self.dtype = dtype
+        if value is not None:
+            arr = jnp.asarray(value)
+            self._value = arr
+            self.shape, self.dtype = arr.shape, arr.dtype
+
+    # -- engine plumbing --------------------------------------------------------
+    def _set(self, v):
+        self._value = v
+
+    @property
+    def value(self):
+        self.engine.wait(self.tag)
+        return self._value
+
+    def asnumpy(self) -> np.ndarray:
+        return np.asarray(self.value)
+
+    # -- functional ops (lazy) -----------------------------------------------
+    def _binary(self, other, fn, name):
+        out = NDArray(engine=self.engine, name=name)
+        if isinstance(other, NDArray):
+            a, b = self, other
+            out.shape = tuple(jnp.broadcast_shapes(a.shape, b.shape))
+            out.dtype = a.dtype
+            self.engine.push(lambda: out._set(fn(a._value, b._value)),
+                             reads=(a.tag, b.tag), writes=(out.tag,), name=name)
+        else:
+            a, c = self, other
+            out.shape, out.dtype = a.shape, a.dtype
+            self.engine.push(lambda: out._set(fn(a._value, c)),
+                             reads=(a.tag,), writes=(out.tag,), name=name)
+        return out
+
+    __add__ = lambda s, o: s._binary(o, lambda a, b: a + b, "add")
+    __radd__ = lambda s, o: s._binary(o, lambda a, b: b + a, "radd")
+    __sub__ = lambda s, o: s._binary(o, lambda a, b: a - b, "sub")
+    __rsub__ = lambda s, o: s._binary(o, lambda a, b: b - a, "rsub")
+    __mul__ = lambda s, o: s._binary(o, lambda a, b: a * b, "mul")
+    __rmul__ = lambda s, o: s._binary(o, lambda a, b: b * a, "rmul")
+    __truediv__ = lambda s, o: s._binary(o, lambda a, b: a / b, "div")
+    __matmul__ = lambda s, o: s._binary(o, lambda a, b: a @ b, "matmul")
+
+    def __neg__(self):
+        out = NDArray(engine=self.engine, name="neg")
+        out.shape, out.dtype = self.shape, self.dtype
+        self.engine.push(lambda: out._set(-self._value),
+                         reads=(self.tag,), writes=(out.tag,), name="neg")
+        return out
+
+    # -- mutating ops (write-tags; §3.2) ------------------------------------
+    def _inplace(self, other, fn, name):
+        if isinstance(other, NDArray):
+            self.engine.push(lambda: self._set(fn(self._value, other._value)),
+                             reads=(other.tag,), writes=(self.tag,), name=name)
+        else:
+            self.engine.push(lambda: self._set(fn(self._value, other)),
+                             reads=(), writes=(self.tag,), name=name)
+        return self
+
+    __iadd__ = lambda s, o: s._inplace(o, lambda a, b: a + b, "iadd")
+    __isub__ = lambda s, o: s._inplace(o, lambda a, b: a - b, "isub")
+    __imul__ = lambda s, o: s._inplace(o, lambda a, b: a * b, "imul")
+
+    def assign(self, other):
+        if isinstance(other, NDArray):
+            self.engine.push(lambda: self._set(other._value),
+                             reads=(other.tag,), writes=(self.tag,), name="assign")
+        else:
+            arr = jnp.asarray(other)
+            self.engine.push(lambda: self._set(arr),
+                             reads=(), writes=(self.tag,), name="assign")
+        return self
+
+    def copy(self) -> "NDArray":
+        out = NDArray(engine=self.engine, name="copy")
+        out.shape, out.dtype = self.shape, self.dtype
+        self.engine.push(lambda: out._set(self._value),
+                         reads=(self.tag,), writes=(out.tag,), name="copy")
+        return out
+
+    def __repr__(self):
+        return f"<NDArray {self.shape} {self.dtype} tag={self.tag.name}>"
+
+
+# -- constructors -----------------------------------------------------------
+
+def array(v, engine=None, name="") -> NDArray:
+    return NDArray(v, engine=engine, name=name)
+
+
+def zeros(shape, dtype=jnp.float32, engine=None, name="zeros") -> NDArray:
+    return NDArray(jnp.zeros(shape, dtype), engine=engine, name=name)
+
+
+def ones(shape, dtype=jnp.float32, engine=None, name="ones") -> NDArray:
+    return NDArray(jnp.ones(shape, dtype), engine=engine, name=name)
+
+
+class RNG:
+    """Seeded random source registered as an engine resource (§3.2: two
+    generators with the same seed must not run in parallel — the seed is a
+    write-tag)."""
+
+    def __init__(self, seed: int, engine: Engine | None = None):
+        self.engine = engine or default_engine()
+        self.tag = Tag(f"rng{seed}")
+        self._state = np.random.RandomState(seed)
+
+    def normal(self, shape, scale=1.0, name="randn") -> NDArray:
+        out = NDArray(engine=self.engine, name=name)
+        out.shape, out.dtype = tuple(shape), jnp.float32
+
+        def fn():
+            out._set(jnp.asarray(
+                self._state.standard_normal(shape).astype(np.float32) * scale))
+        # the RNG state is WRITTEN: serializes draws for reproducibility
+        self.engine.push(fn, reads=(), writes=(self.tag, out.tag), name=name)
+        return out
+
+    def uniform(self, shape, low=0.0, high=1.0, name="rand") -> NDArray:
+        out = NDArray(engine=self.engine, name=name)
+        out.shape, out.dtype = tuple(shape), jnp.float32
+
+        def fn():
+            out._set(jnp.asarray(
+                self._state.uniform(low, high, shape).astype(np.float32)))
+        self.engine.push(fn, reads=(), writes=(self.tag, out.tag), name=name)
+        return out

@@ -1,0 +1,499 @@
+"""Operator registry (MXNet §2.1 "operators").
+
+Each operator declares:
+  * ``infer``      — output shapes from input shapes + attrs,
+  * ``compute``    — the jnp implementation (jit-able; fused segments jit it),
+  * ``grad``       — builds the *symbolic backward graph* (MXNet-style
+                     auto-differentiation: gradients are graph nodes, not a
+                     tape),
+  * ``elementwise``— eligibility for operator grouping/fusion (§3.1),
+  * ``inplace``    — (input_idx, output_idx) pairs whose buffers may be
+                     shared by the *inplace* memory-plan heuristic (§3.1).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import jax
+
+from .graph import Node, NodeRef
+
+_REGISTRY: dict[str, "OpDef"] = {}
+
+
+@dataclass
+class OpDef:
+    name: str
+    infer: Callable
+    compute: Callable  # (list_of_arrays, attrs) -> tuple of arrays
+    grad: Callable | None = None  # (B, node, inputs, out_grads) -> list grads
+    infer_dtype: Callable | None = None
+    elementwise: bool = False
+    inplace: tuple = ()
+    num_outputs: int = 1
+    flops: Callable | None = None  # (in_shapes, out_shapes, attrs) -> float
+
+
+def register(**kw):
+    op = OpDef(**kw)
+    _REGISTRY[op.name] = op
+    return op
+
+
+def get(name: str) -> OpDef:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown operator {name!r}")
+    return _REGISTRY[name]
+
+
+def all_ops():
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# Graph-builder helper used by gradient functions
+
+
+class B:
+    """Tiny builder: ``B.mul(x, y)`` appends a node and returns its NodeRef."""
+
+    @staticmethod
+    def _mk(op, ins, attrs=None, name=None, index=0):
+        return NodeRef(Node(op, list(ins), attrs or {}, name), index)
+
+    def __getattr__(self, op):
+        def make(*ins, **attrs):
+            name = attrs.pop("name", None)
+            return self._mk(op, ins, attrs, name)
+        return make
+
+
+GB = B()
+
+
+def add_n(refs):
+    """Sum a list of gradient contributions (skipping None)."""
+    refs = [r for r in refs if r is not None]
+    if not refs:
+        return None
+    if len(refs) == 1:
+        return refs[0]
+    return GB.add_n(*refs)
+
+
+# ---------------------------------------------------------------------------
+# Shape helpers
+
+
+def _same(in_shapes, attrs):
+    return [in_shapes[0]]
+
+
+def _broadcast_shape(a, b):
+    return tuple(jnp.broadcast_shapes(tuple(a), tuple(b)))
+
+
+def _binary_infer(in_shapes, attrs):
+    return [_broadcast_shape(in_shapes[0], in_shapes[1])]
+
+
+def _unbroadcast(B_, g, target_shape, src_shape):
+    """Sum-reduce g (shape src) back to target_shape (reverse of broadcast)."""
+    if tuple(target_shape) == tuple(src_shape):
+        return g
+    return GB.reduce_to(g, shape=tuple(target_shape))
+
+
+# ---------------------------------------------------------------------------
+# Elementwise binary ops
+
+def _bin(name, fn, grad_fn):
+    def compute(ins, attrs):
+        return (fn(ins[0], ins[1]),)
+    register(name=name, infer=_binary_infer, compute=compute, grad=grad_fn,
+             elementwise=True, inplace=((0, 0), (1, 0)))
+
+
+def _grad_add(Bx, node, in_shapes, og):
+    g = og[0]
+    return [_unbroadcast(Bx, g, in_shapes[0], _broadcast_shape(*in_shapes[:2])),
+            _unbroadcast(Bx, g, in_shapes[1], _broadcast_shape(*in_shapes[:2]))]
+
+
+def _grad_sub(Bx, node, in_shapes, og):
+    g = og[0]
+    bs = _broadcast_shape(*in_shapes[:2])
+    return [_unbroadcast(Bx, g, in_shapes[0], bs),
+            _unbroadcast(Bx, GB.neg(g), in_shapes[1], bs)]
+
+
+def _grad_mul(Bx, node, in_shapes, og):
+    g = og[0]
+    x, y = node.inputs
+    bs = _broadcast_shape(*in_shapes[:2])
+    return [_unbroadcast(Bx, GB.mul(g, y), in_shapes[0], bs),
+            _unbroadcast(Bx, GB.mul(g, x), in_shapes[1], bs)]
+
+
+def _grad_div(Bx, node, in_shapes, og):
+    g = og[0]
+    x, y = node.inputs
+    bs = _broadcast_shape(*in_shapes[:2])
+    gx = GB.div(g, y)
+    gy = GB.neg(GB.div(GB.mul(g, x), GB.mul(y, y)))
+    return [_unbroadcast(Bx, gx, in_shapes[0], bs),
+            _unbroadcast(Bx, gy, in_shapes[1], bs)]
+
+
+_bin("add", lambda a, b: a + b, _grad_add)
+_bin("sub", lambda a, b: a - b, _grad_sub)
+_bin("mul", lambda a, b: a * b, _grad_mul)
+_bin("div", lambda a, b: a / b, _grad_div)
+_bin("maximum", lambda a, b: jnp.maximum(a, b),
+     lambda Bx, node, in_shapes, og: [
+         GB.mul(og[0], GB.greater_equal(node.inputs[0], node.inputs[1])),
+         GB.mul(og[0], GB.greater_equal(node.inputs[1], node.inputs[0]))])
+
+register(name="greater_equal", infer=_binary_infer,
+         compute=lambda ins, attrs: ((ins[0] >= ins[1]).astype(ins[0].dtype),),
+         grad=lambda Bx, node, in_shapes, og: [None, None], elementwise=True)
+
+
+# ---------------------------------------------------------------------------
+# Elementwise unary ops
+
+def _un(name, fn, grad_fn, inplace=((0, 0),)):
+    register(name=name, infer=_same,
+             compute=lambda ins, attrs, fn=fn: (fn(ins[0]),),
+             grad=grad_fn, elementwise=True, inplace=inplace)
+
+
+_un("neg", lambda a: -a, lambda Bx, n, s, og: [GB.neg(og[0])])
+_un("exp", jnp.exp, lambda Bx, n, s, og: [GB.mul(og[0], GB.exp(n.inputs[0]))])
+_un("log", jnp.log, lambda Bx, n, s, og: [GB.div(og[0], n.inputs[0])])
+_un("sqrt", jnp.sqrt,
+    lambda Bx, n, s, og: [GB.div(og[0], GB.scale(GB.sqrt(n.inputs[0]), alpha=2.0))])
+_un("tanh", jnp.tanh,
+    lambda Bx, n, s, og: [GB.mul(og[0], GB.sub(GB.ones_like(n.inputs[0]),
+                                               GB.mul(GB.tanh(n.inputs[0]),
+                                                      GB.tanh(n.inputs[0]))))])
+_un("relu", lambda a: jnp.maximum(a, 0),
+    lambda Bx, n, s, og: [GB.mul(og[0], GB.greater_equal(
+        n.inputs[0], GB.zeros_like(n.inputs[0])))])
+_un("sigmoid", jax.nn.sigmoid,
+    lambda Bx, n, s, og: [GB.mul(og[0], GB.mul(GB.sigmoid(n.inputs[0]),
+                                               GB.sub(GB.ones_like(n.inputs[0]),
+                                                      GB.sigmoid(n.inputs[0]))))])
+_un("ones_like", jnp.ones_like, lambda Bx, n, s, og: [None])
+_un("zeros_like", jnp.zeros_like, lambda Bx, n, s, og: [None])
+_un("copy", lambda a: a, lambda Bx, n, s, og: [og[0]])
+_un("stop_gradient", jax.lax.stop_gradient, lambda Bx, n, s, og: [None])
+
+
+def _scale_compute(ins, attrs):
+    return (ins[0] * attrs.get("alpha", 1.0) + attrs.get("beta", 0.0),)
+
+
+register(name="scale", infer=_same, compute=_scale_compute,
+         grad=lambda Bx, n, s, og: [GB.scale(og[0], alpha=n.attrs.get("alpha", 1.0))],
+         elementwise=True, inplace=((0, 0),))
+
+# Fused a*b+beta — the paper's "a × b + 1 is replaced by a single call" example.
+register(name="fma_const", infer=_binary_infer,
+         compute=lambda ins, attrs: (ins[0] * ins[1] + attrs.get("beta", 0.0),),
+         grad=_grad_mul, elementwise=True, inplace=((0, 0), (1, 0)))
+
+
+# ---------------------------------------------------------------------------
+# add_n (gradient accumulation)
+
+register(
+    name="add_n",
+    infer=lambda in_shapes, attrs: [in_shapes[0]],
+    compute=lambda ins, attrs: (sum(ins[1:], start=ins[0]),),
+    grad=lambda Bx, n, s, og: [og[0]] * len(n.inputs),
+    elementwise=True, inplace=((0, 0),),
+)
+
+
+# ---------------------------------------------------------------------------
+# Structural ops
+
+def _reshape_infer(in_shapes, attrs):
+    shape = list(attrs["shape"])
+    n = math.prod(in_shapes[0])
+    if -1 in shape:
+        i = shape.index(-1)
+        rest = math.prod(s for s in shape if s != -1)
+        shape[i] = n // rest
+    assert math.prod(shape) == n, (in_shapes, shape)
+    return [tuple(shape)]
+
+
+register(name="reshape", infer=_reshape_infer,
+         compute=lambda ins, attrs: (jnp.reshape(ins[0], attrs["shape"]),),
+         grad=lambda Bx, n, s, og: [GB.reshape(og[0], shape=tuple(s[0]))],
+         inplace=((0, 0),))
+
+def _grad_transpose(Bx, n, s, og):
+    axes = n.attrs.get("axes")
+    if axes is None:
+        return [GB.transpose(og[0])]
+    inv = [0] * len(axes)
+    for i, a in enumerate(axes):
+        inv[a] = i
+    return [GB.transpose(og[0], axes=tuple(inv))]
+
+
+register(name="transpose",
+         infer=lambda in_shapes, attrs: [tuple(in_shapes[0][i]
+                                               for i in (attrs.get("axes") or
+                                               range(len(in_shapes[0]) - 1, -1, -1)))],
+         compute=lambda ins, attrs: (jnp.transpose(ins[0], attrs.get("axes")),),
+         grad=_grad_transpose)
+
+
+def _bcast_infer(in_shapes, attrs):
+    return [tuple(attrs["shape"])]
+
+
+register(name="broadcast_to", infer=_bcast_infer,
+         compute=lambda ins, attrs: (jnp.broadcast_to(ins[0], attrs["shape"]),),
+         grad=lambda Bx, n, s, og: [GB.reduce_to(og[0], shape=tuple(s[0]))])
+
+
+def _reduce_to_compute(ins, attrs):
+    x = ins[0]
+    target = tuple(attrs["shape"])
+    # sum-reduce broadcasted dims back
+    while x.ndim > len(target):
+        x = x.sum(axis=0)
+    for ax, (t, s) in enumerate(zip(target, x.shape)):
+        if t != s:
+            x = x.sum(axis=ax, keepdims=True)
+    return (jnp.reshape(x, target),)
+
+
+register(name="reduce_to", infer=_bcast_infer, compute=_reduce_to_compute,
+         grad=lambda Bx, n, s, og: [GB.broadcast_to(og[0], shape=tuple(s[0]))])
+
+
+def _reduce_infer(in_shapes, attrs):
+    axes = attrs.get("axis")
+    sh = list(in_shapes[0])
+    if axes is None:
+        return [()] if not attrs.get("keepdims") else [tuple(1 for _ in sh)]
+    axes = (axes,) if isinstance(axes, int) else tuple(axes)
+    if attrs.get("keepdims"):
+        return [tuple(1 if i in axes else d for i, d in enumerate(sh))]
+    return [tuple(d for i, d in enumerate(sh) if i not in axes)]
+
+
+def _grad_reduce_sum(Bx, node, in_shapes, og):
+    return [GB.broadcast_like_sum(og[0], shape=tuple(in_shapes[0]),
+                                  axis=node.attrs.get("axis"),
+                                  keepdims=node.attrs.get("keepdims", False))]
+
+
+register(name="reduce_sum", infer=_reduce_infer,
+         compute=lambda ins, attrs: (jnp.sum(ins[0], axis=attrs.get("axis"),
+                                             keepdims=attrs.get("keepdims", False)),),
+         grad=_grad_reduce_sum)
+
+
+def _blsum_compute(ins, attrs):
+    g = ins[0]
+    shape = tuple(attrs["shape"])
+    axis, keepdims = attrs.get("axis"), attrs.get("keepdims", False)
+    if axis is not None and not keepdims:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        for ax in sorted(axes):
+            g = jnp.expand_dims(g, ax)
+    elif axis is None and not keepdims:
+        g = jnp.reshape(g, (1,) * len(shape))
+    return (jnp.broadcast_to(g, shape),)
+
+
+register(name="broadcast_like_sum", infer=_bcast_infer, compute=_blsum_compute,
+         grad=lambda Bx, n, s, og: [GB.reduce_sum(og[0], axis=n.attrs.get("axis"),
+                                                  keepdims=n.attrs.get("keepdims", False))])
+
+
+def _grad_reduce_mean(Bx, node, in_shapes, og):
+    axes = node.attrs.get("axis")
+    sh = in_shapes[0]
+    if axes is None:
+        cnt = math.prod(sh)
+    else:
+        axes = (axes,) if isinstance(axes, int) else tuple(axes)
+        cnt = math.prod(sh[i] for i in axes)
+    g = GB.scale(og[0], alpha=1.0 / cnt)
+    return [GB.broadcast_like_sum(g, shape=tuple(sh), axis=node.attrs.get("axis"),
+                                  keepdims=node.attrs.get("keepdims", False))]
+
+
+register(name="reduce_mean", infer=_reduce_infer,
+         compute=lambda ins, attrs: (jnp.mean(ins[0], axis=attrs.get("axis"),
+                                              keepdims=attrs.get("keepdims", False)),),
+         grad=_grad_reduce_mean)
+
+
+# ---------------------------------------------------------------------------
+# Linear algebra ("big" BLAS ops)
+
+def _matmul_infer(in_shapes, attrs):
+    a, b = in_shapes
+    assert len(a) == 2 and len(b) == 2 and a[1] == b[0], (a, b)
+    return [(a[0], b[1])]
+
+
+def _grad_matmul(Bx, node, in_shapes, og):
+    a, b = node.inputs
+    g = og[0]
+    return [GB.matmul(g, GB.transpose(b)), GB.matmul(GB.transpose(a), g)]
+
+
+register(name="matmul", infer=_matmul_infer,
+         compute=lambda ins, attrs: (ins[0] @ ins[1],),
+         grad=_grad_matmul,
+         flops=lambda i, o, a: 2.0 * i[0][0] * i[0][1] * i[1][1])
+
+
+def _fc_infer(in_shapes, attrs):
+    x, w = in_shapes[0], in_shapes[1]
+    assert w[1] == x[-1], (x, w)
+    return [tuple(x[:-1]) + (w[0],)]
+
+
+def _fc_compute(ins, attrs):
+    x, w = ins[0], ins[1]
+    y = x @ w.T
+    if len(ins) > 2:
+        y = y + ins[2]
+    return (y,)
+
+
+def _grad_fc(Bx, node, in_shapes, og):
+    x, w = node.inputs[0], node.inputs[1]
+    g = og[0]
+    gx = GB.matmul(g, w)
+    gw = GB.matmul(GB.transpose(g), x)
+    grads = [gx, gw]
+    if len(node.inputs) > 2:
+        grads.append(GB.reduce_sum(g, axis=0))
+    return grads
+
+
+register(name="fully_connected", infer=_fc_infer, compute=_fc_compute,
+         grad=_grad_fc,
+         flops=lambda i, o, a: 2.0 * math.prod(i[0][:-1]) * i[0][-1] * i[1][0])
+
+
+# ---------------------------------------------------------------------------
+# Softmax family
+
+def _softmax_compute(ins, attrs):
+    return (jax.nn.softmax(ins[0], axis=-1),)
+
+
+def _grad_softmax(Bx, node, in_shapes, og):
+    # dx = p * (g - sum(g * p, -1, keepdims))
+    p = GB.softmax(node.inputs[0])
+    gp = GB.mul(og[0], p)
+    s = GB.reduce_sum(gp, axis=-1 % len(in_shapes[0]), keepdims=True)
+    return [GB.mul(p, GB.sub(og[0], GB.broadcast_to(s, shape=tuple(in_shapes[0]))))]
+
+
+register(name="softmax", infer=_same, compute=_softmax_compute, grad=_grad_softmax)
+
+register(name="log_softmax", infer=_same,
+         compute=lambda ins, attrs: (jax.nn.log_softmax(ins[0], axis=-1),),
+         grad=lambda Bx, n, s, og: [GB.sub(og[0], GB.mul(
+             GB.softmax(n.inputs[0]),
+             GB.broadcast_to(GB.reduce_sum(og[0], axis=len(s[0]) - 1, keepdims=True),
+                             shape=tuple(s[0]))))])
+
+
+def _sxent_infer(in_shapes, attrs):
+    logits, labels = in_shapes
+    assert len(logits) == 2 and labels == (logits[0],), (logits, labels)
+    return [(), logits]  # (mean loss, softmax probs)
+
+
+def _sxent_compute(ins, attrs):
+    logits, labels = ins
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[:, None].astype(jnp.int32), axis=-1)
+    return (jnp.mean(nll), jax.nn.softmax(logits, axis=-1))
+
+
+def _grad_sxent(Bx, node, in_shapes, og):
+    # MXNet SoftmaxOutput semantics: the loss layer defines its own gradient
+    # (p - onehot)/B, scaled by the incoming loss grad.
+    logits, labels = node.inputs
+    B_ = in_shapes[0][0]
+    g = GB.softmax_xent_backward(logits, labels, name=None)
+    g = GB.scale(g, alpha=1.0 / B_)
+    if og[0] is not None:
+        g = GB.mul(g, GB.broadcast_to(
+            GB.reshape(og[0], shape=(1, 1)), shape=tuple(in_shapes[0])))
+    return [g, None]
+
+
+register(name="softmax_xent", infer=_sxent_infer, compute=_sxent_compute,
+         grad=_grad_sxent, num_outputs=2)
+
+register(name="softmax_xent_backward",
+         infer=lambda in_shapes, attrs: [in_shapes[0]],
+         compute=lambda ins, attrs: (
+             jax.nn.softmax(ins[0], -1)
+             - jax.nn.one_hot(ins[1].astype(jnp.int32), ins[0].shape[-1],
+                              dtype=ins[0].dtype),),
+         grad=None)
+
+
+# ---------------------------------------------------------------------------
+# Norm layers (as "big ops", §3.1 "manually implemented well-optimized ops")
+
+def _layernorm_compute(ins, attrs):
+    x, gamma, beta = ins
+    eps = attrs.get("eps", 1e-5)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return ((x - mu) / jnp.sqrt(var + eps) * gamma + beta,)
+
+
+def _grad_layernorm(Bx, node, in_shapes, og):
+    # Fallback: express via primitive graph ops (numerically matches compute).
+    x, gamma, beta = node.inputs
+    sh = tuple(in_shapes[0])
+    d = sh[-1]
+    eps = node.attrs.get("eps", 1e-5)
+    mu = GB.reduce_mean(x, axis=len(sh) - 1, keepdims=True)
+    mu_b = GB.broadcast_to(mu, shape=sh)
+    xc = GB.sub(x, mu_b)
+    var = GB.reduce_mean(GB.mul(xc, xc), axis=len(sh) - 1, keepdims=True)
+    rstd = GB.div(GB.ones_like(var), GB.sqrt(GB.scale(var, beta=eps)))
+    rstd_b = GB.broadcast_to(rstd, shape=sh)
+    xhat = GB.mul(xc, rstd_b)
+    g = og[0]
+    gamma_b = GB.broadcast_to(GB.reshape(gamma, shape=(1,) * (len(sh) - 1) + (d,)),
+                              shape=sh)
+    gxhat = GB.mul(g, gamma_b)
+    m1 = GB.broadcast_to(GB.reduce_mean(gxhat, axis=len(sh) - 1, keepdims=True),
+                         shape=sh)
+    m2 = GB.broadcast_to(GB.reduce_mean(GB.mul(gxhat, xhat), axis=len(sh) - 1,
+                                        keepdims=True), shape=sh)
+    gx = GB.mul(rstd_b, GB.sub(GB.sub(gxhat, m1), GB.mul(xhat, m2)))
+    red_axes = tuple(range(len(sh) - 1))
+    ggamma = GB.reduce_sum(GB.mul(g, xhat), axis=red_axes)
+    gbeta = GB.reduce_sum(g, axis=red_axes)
+    return [gx, ggamma, gbeta]
+
+
+register(name="layernorm",
+         infer=lambda in_shapes, attrs: [in_shapes[0]],
+         compute=_layernorm_compute, grad=_grad_layernorm)

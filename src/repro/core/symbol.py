@@ -1,0 +1,188 @@
+"""Symbol — declarative symbolic expressions (MXNet §2.1).
+
+A Symbol wraps one or more graph-node output references.  Symbols are
+composited from operators (simple matrix ops like ``+`` or whole neural-net
+layers like :func:`FullyConnected`), may be multi-output, and support shape
+inference, save/load, memory estimation, autodiff (:meth:`Symbol.grad`) and
+binding (:meth:`Symbol.bind`) to an executor.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Sequence
+
+from .graph import Graph, Node, NodeRef, infer_shapes
+from . import ops as _ops
+
+
+class Symbol:
+    def __init__(self, outputs: Sequence[NodeRef]):
+        self._outputs = list(outputs)
+
+    # -- composition --------------------------------------------------------
+    @staticmethod
+    def _from_op(op: str, inputs: Sequence["Symbol"], attrs=None, name=None) -> "Symbol":
+        refs = []
+        for s in inputs:
+            if len(s._outputs) != 1:
+                raise ValueError("operator inputs must be single-output symbols; "
+                                 "select with sym[i]")
+            refs.append(s._outputs[0])
+        node = Node(op, refs, attrs, name)
+        n_out = _ops.get(op).num_outputs
+        return Symbol([NodeRef(node, i) for i in range(n_out)])
+
+    def __getitem__(self, i: int) -> "Symbol":
+        return Symbol([self._outputs[i]])
+
+    def __len__(self):
+        return len(self._outputs)
+
+    # -- operator sugar ------------------------------------------------------
+    def _binop(self, op, other, reverse=False):
+        if not isinstance(other, Symbol):
+            if op in ("add", "sub"):
+                alpha, beta = (1.0, float(other)) if not reverse else (-1.0, float(other))
+                if op == "sub" and not reverse:
+                    beta = -float(other)
+                return Symbol._from_op("scale", [self],
+                                       {"alpha": alpha, "beta": beta})
+            if op in ("mul", "div"):
+                alpha = float(other) if op == "mul" else 1.0 / float(other)
+                return Symbol._from_op("scale", [self], {"alpha": alpha})
+            raise TypeError(other)
+        a, b = (other, self) if reverse else (self, other)
+        return Symbol._from_op(op, [a, b])
+
+    __add__ = lambda s, o: s._binop("add", o)
+    __radd__ = lambda s, o: s._binop("add", o, True)
+    __sub__ = lambda s, o: s._binop("sub", o)
+    __rsub__ = lambda s, o: s._binop("sub", o, True)
+    __mul__ = lambda s, o: s._binop("mul", o)
+    __rmul__ = lambda s, o: s._binop("mul", o, True)
+    __truediv__ = lambda s, o: s._binop("div", o)
+    __neg__ = lambda s: Symbol._from_op("neg", [s])
+    __matmul__ = lambda s, o: Symbol._from_op("matmul", [s, o])
+
+    # -- introspection -------------------------------------------------------
+    def graph(self) -> Graph:
+        return Graph(self._outputs)
+
+    def list_arguments(self) -> list[str]:
+        return [n.name for n in self.graph().variables]
+
+    def infer_shape(self, **var_shapes):
+        g = self.graph()
+        shapes, _ = infer_shapes(g, var_shapes)
+        return [shapes[r.node.uid][r.index] for r in self._outputs]
+
+    def memory_estimate(self, strategy: str = "both", **var_shapes) -> dict:
+        """Bytes needed for internal variables under a memplan strategy."""
+        from .memplan import plan_graph
+        g = self.graph()
+        shapes, dtypes = infer_shapes(g, var_shapes)
+        return plan_graph(g, shapes, dtypes, strategy=strategy).stats()
+
+    # -- autodiff (§2.1 "backward") ------------------------------------------
+    def grad(self, wrt: Sequence[str], **var_shapes) -> "Symbol":
+        from .autodiff import gradient, gradient_with_shapes
+        if var_shapes:
+            return gradient_with_shapes(self, wrt, var_shapes)
+        return gradient(self, wrt)
+
+    # -- save / load -----------------------------------------------------------
+    def tojson(self) -> str:
+        g = self.graph()
+        idx = {n.uid: i for i, n in enumerate(g.nodes)}
+        nodes = [{
+            "op": n.op, "name": n.name, "attrs": _jsonable(n.attrs),
+            "inputs": [[idx[r.node.uid], r.index] for r in n.inputs],
+        } for n in g.nodes]
+        heads = [[idx[r.node.uid], r.index] for r in self._outputs]
+        return json.dumps({"nodes": nodes, "heads": heads})
+
+    @staticmethod
+    def fromjson(s: str) -> "Symbol":
+        d = json.loads(s)
+        built: list[Node] = []
+        for nd in d["nodes"]:
+            ins = [NodeRef(built[i], j) for i, j in nd["inputs"]]
+            attrs = {k: (tuple(v) if isinstance(v, list) else v)
+                     for k, v in nd["attrs"].items()}
+            built.append(Node(nd["op"], ins, attrs, nd["name"]))
+        return Symbol([NodeRef(built[i], j) for i, j in d["heads"]])
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.tojson())
+
+    @staticmethod
+    def load(path: str) -> "Symbol":
+        with open(path) as f:
+            return Symbol.fromjson(f.read())
+
+    # -- binding / evaluation ---------------------------------------------------
+    def bind(self, args: dict, grad_wrt: Sequence[str] = (), optimize: bool = True,
+             memplan: str = "both", **kw):
+        from .executor import Executor
+        return Executor(self, args, grad_wrt=grad_wrt, optimize=optimize,
+                        memplan=memplan, **kw)
+
+    def eval(self, **args):
+        ex = self.bind(args, optimize=True)
+        return ex.forward()
+
+    def __repr__(self):
+        return f"<Symbol {[r.node.name for r in self._outputs]}>"
+
+
+def _jsonable(attrs: dict) -> dict:
+    out = {}
+    for k, v in attrs.items():
+        out[k] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layer-level operator API (Fig. 2 style)
+
+
+def Variable(name: str) -> Symbol:
+    return Symbol([NodeRef(Node("var", [], {}, name))])
+
+
+def FullyConnected(data: Symbol, num_hidden: int, name: str | None = None,
+                   no_bias: bool = False) -> Symbol:
+    prefix = name or f"fc{data._outputs[0].node.uid}"
+    w = Variable(prefix + "_weight")
+    ins = [data, w] if no_bias else [data, w, Variable(prefix + "_bias")]
+    return Symbol._from_op("fully_connected", ins,
+                           {"num_hidden": int(num_hidden)}, name=prefix)
+
+
+def Activation(data: Symbol, act_type: str = "relu", name=None) -> Symbol:
+    assert act_type in ("relu", "tanh", "sigmoid")
+    return Symbol._from_op(act_type, [data], name=name)
+
+
+def SoftmaxOutput(data: Symbol, label: Symbol, name=None) -> Symbol:
+    """Outputs: [0] mean cross-entropy loss, [1] softmax probabilities."""
+    return Symbol._from_op("softmax_xent", [data, label], name=name)
+
+
+def Softmax(data: Symbol, name=None) -> Symbol:
+    return Symbol._from_op("softmax", [data], name=name)
+
+
+def LayerNorm(data: Symbol, gamma: Symbol, beta: Symbol, eps: float = 1e-5,
+              name=None) -> Symbol:
+    return Symbol._from_op("layernorm", [data, gamma, beta], {"eps": eps}, name=name)
+
+
+def chain(*stages):
+    """``chain(Variable("data"), lambda x: FullyConnected(x, 64), ...)`` —
+    the Julia ``@mx.chain`` macro from Fig. 2, in Python."""
+    sym = stages[0]
+    for fn in stages[1:]:
+        sym = fn(sym)
+    return sym

@@ -1,0 +1,5 @@
+from .recordio import RecordWriter, RecordReader, pack_records
+from .pipeline import DataIterator, PrefetchIterator, SyntheticLM
+
+__all__ = ["RecordWriter", "RecordReader", "pack_records", "DataIterator",
+           "PrefetchIterator", "SyntheticLM"]

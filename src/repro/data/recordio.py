@@ -1,0 +1,83 @@
+"""Packed record file with an index for sequential AND random seek
+(MXNet §2.4: "tools to pack arbitrary sized examples into a single compact
+file to facilitate both sequential and random seek").
+
+Format: each record is [magic u32][length u32][crc32 u32][payload bytes],
+with a sidecar ``.idx`` file of u64 offsets so ``read(i)`` is one seek.
+"""
+from __future__ import annotations
+
+import io
+import struct
+import zlib
+from pathlib import Path
+
+MAGIC = 0x4D584E54  # "MXNT"
+_HDR = struct.Struct("<III")
+
+
+class RecordWriter:
+    def __init__(self, path: str):
+        self.path = Path(path)
+        self._f = open(path, "wb")
+        self._offsets: list[int] = []
+
+    def write(self, payload: bytes):
+        self._offsets.append(self._f.tell())
+        self._f.write(_HDR.pack(MAGIC, len(payload),
+                                zlib.crc32(payload) & 0xFFFFFFFF))
+        self._f.write(payload)
+
+    def close(self):
+        self._f.close()
+        with open(str(self.path) + ".idx", "wb") as f:
+            f.write(struct.pack("<Q", len(self._offsets)))
+            for off in self._offsets:
+                f.write(struct.pack("<Q", off))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+
+
+class RecordReader:
+    """Random-seek reader over a packed record file."""
+
+    def __init__(self, path: str):
+        self.path = Path(path)
+        self._f = open(path, "rb")
+        with open(str(path) + ".idx", "rb") as f:
+            (n,) = struct.unpack("<Q", f.read(8))
+            self._offsets = [struct.unpack("<Q", f.read(8))[0]
+                             for _ in range(n)]
+
+    def __len__(self):
+        return len(self._offsets)
+
+    def read(self, i: int) -> bytes:
+        self._f.seek(self._offsets[i])
+        magic, length, crc = _HDR.unpack(self._f.read(_HDR.size))
+        if magic != MAGIC:
+            raise IOError(f"bad magic at record {i}")
+        payload = self._f.read(length)
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            raise IOError(f"crc mismatch at record {i}")
+        return payload
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self.read(i)
+
+    def close(self):
+        self._f.close()
+
+
+def pack_records(path: str, payloads) -> int:
+    with RecordWriter(path) as w:
+        n = 0
+        for p in payloads:
+            w.write(p)
+            n += 1
+    return n

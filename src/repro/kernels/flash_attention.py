@@ -1,0 +1,139 @@
+"""Flash attention as a Pallas TPU kernel (the paper's §3.1 "manually
+implemented well-optimized big operation", adapted to the MXU/VMEM).
+
+Design (TPU-native, not a CUDA port):
+  * grid = (B, H, nQ, nK); the nK axis is "arbitrary" (sequential) so the
+    online-softmax state (m, l, acc) lives in VMEM scratch across k-blocks;
+  * q/k/v blocks are staged HBM->VMEM by BlockSpecs; block shapes default
+    to (128, head_dim) — MXU-aligned (multiples of 128 on the matmul dims);
+  * GQA: the k/v BlockSpec index_map folds the query head onto its kv head
+    (h // group), so no repeated-KV materialization;
+  * causal/sliding-window masking and gemma-style logit soft-capping are
+    fused into the score block;
+  * accumulation in f32, outputs cast back to the input dtype.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, softcap, q_offset, kv_len,
+                  block_q, block_k, n_k):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qi = pl.program_id(2)
+    qpos = (qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+            + q_offset)
+    kpos = (ki * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1))
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (bq, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                              # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
+        o_ref[0, :, 0, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_offset=0, kv_len=None, block_q=128, block_k=128,
+                    interpret=None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd). Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    assert H % K == 0
+    G = H // K
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pk and kv_len is None:
+        kv_len = Sk                       # mask the padded keys
+    if pq:
+        q = jnp.pad(q, [(0, 0), (0, pq), (0, 0), (0, 0)])
+    if pk:
+        k = jnp.pad(k, [(0, 0), (0, pk), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pk), (0, 0), (0, 0)])
+    Sq_p, Sk_p = Sq + pq, Sk + pk
+    n_q, n_k = Sq_p // block_q, Sk_p // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, softcap=softcap, q_offset=q_offset, kv_len=kv_len,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    grid = (B, H, n_q, n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, qi, ki, G=G: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq_p, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    if pq:
+        out = out[:, :Sq]
+    return out

@@ -1,0 +1,25 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU containers the kernels execute with ``interpret=True`` (the kernel
+body runs in Python per grid step) — correctness validation only; TPU is
+the performance target.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .fused_update import sgd_momentum as _sgd
+from .rmsnorm import rmsnorm as _rmsnorm
+
+flash_attention = jax.jit(_flash, static_argnames=(
+    "causal", "window", "softcap", "q_offset", "kv_len", "block_q",
+    "block_k", "interpret"))
+
+rmsnorm = jax.jit(_rmsnorm, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+
+sgd_momentum = jax.jit(_sgd, static_argnames=("lr", "mu", "weight_decay",
+                                              "block", "interpret"))

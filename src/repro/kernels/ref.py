@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        q_offset=0, kv_len=None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd), H % K == 0. f32 math."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32), kk) / np.sqrt(hd)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kpos[None] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= (kpos < kv_len)[None]
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, vv).astype(q.dtype)
+
+
+def rmsnorm_ref(x, weight, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def sgd_momentum_ref(param, grad, mom, *, lr, mu, weight_decay):
+    """The KVStore updater as a fused mutating op (fp32 momentum master)."""
+    g32 = grad.astype(jnp.float32) + weight_decay * param.astype(jnp.float32)
+    mom_new = mu * mom + g32
+    p_new = (param.astype(jnp.float32) - lr * mom_new).astype(param.dtype)
+    return p_new, mom_new

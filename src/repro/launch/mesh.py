@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  Single pod: 256 chips (16 data × 16 model).
+Multi-pod: 2 pods × 256 = 512 chips with a leading "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs of the pjit code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets; DESIGN.md §6)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+CHIPS_PER_POD = 256

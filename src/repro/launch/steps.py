@@ -1,0 +1,97 @@
+"""Step functions (pure, jit-able) shared by the dry-run, the trainer and
+the serving engine: train_step (loss+grad+SGD-momentum), prefill_step,
+decode_step — plus their abstract input specs for lowering.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import INPUT_SHAPES, ArchConfig, get_model
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# optimizer (SGD + momentum; fp32 master momentum, same sharding as params)
+
+def init_opt_state(params):
+    return {"mom": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_momentum_update(params, grads, opt_state, lr=1e-3, mu=0.9,
+                        weight_decay=1e-4):
+    def upd(p, g, m):
+        g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = mu * m + g32
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat = jax.tree.map(upd, params, grads, opt_state["mom"])
+    new_p = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mom": new_m, "step": opt_state["step"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+def make_train_step(cfg: ArchConfig, lr=1e-3):
+    model = get_model(cfg)
+    # remat happens at super-block granularity inside the model (cfg.remat)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state = sgd_momentum_update(params, grads, opt_state,
+                                                lr=lr)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    model = get_model(cfg)
+
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (§MULTI-POD DRY-RUN item 2: ShapeDtypeStruct stand-ins)
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """All step inputs as ShapeDtypeStructs (weak-type-correct, shardable,
+    no device allocation)."""
+    shp = INPUT_SHAPES[shape_name]
+    model = get_model(cfg)
+    params = model.param_specs()
+    if shp.kind == "train":
+        batch = model.batch_specs("train", shp.global_batch, shp.seq_len)
+        opt = jax.eval_shape(init_opt_state, params)
+        return {"params": params, "opt_state": opt, "batch": batch}
+    if shp.kind == "prefill":
+        batch = model.batch_specs("prefill", shp.global_batch, shp.seq_len)
+        return {"params": params, "batch": batch}
+    # decode: one new token against a seq_len cache
+    batch = model.batch_specs("decode", shp.global_batch, shp.seq_len)
+    cache = model.cache_specs(shp.global_batch, shp.seq_len)
+    return {"params": params, "cache": cache, "batch": batch}

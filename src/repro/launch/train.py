@@ -1,0 +1,65 @@
+"""Training launcher.
+
+CPU smoke (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --reduced --steps 50 --batch 8 --seq 64
+
+Production (TPU pod; mesh built from the assignment's production shapes):
+  python -m repro.launch.train --arch dbrx-132b --shape train_4k --mesh single
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import PrefetchIterator, SyntheticLM
+from repro.models import reduced
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family variant (CPU smoke)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--vocab", type=int, default=0,
+                    help="override vocab (reduced runs)")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--mesh", choices=["host", "single", "multi"],
+                    default="host")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        over = {"vocab": args.vocab} if args.vocab else {}
+        cfg = reduced(cfg, **over)
+
+    if args.mesh != "host":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        ctx = jax.set_mesh(mesh)
+    else:
+        import contextlib
+        ctx = contextlib.nullcontext()
+
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1),
+                       checkpoint_every=args.checkpoint_every,
+                       grad_clip=5.0)
+    data = PrefetchIterator(
+        SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps),
+        depth=4)
+    with ctx:
+        tr = Trainer(cfg, tcfg)
+        tr.fit(iter(data))
+    print("final:", tr.history[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .common import ArchConfig, InputShape, INPUT_SHAPES, LayerSpec, reduced
+from .model import Model, get_model
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "LayerSpec",
+           "reduced", "Model", "get_model"]

@@ -1,0 +1,317 @@
+"""Neural-net layers in pure JAX: RMSNorm, RoPE, GQA attention (train +
+decode), gated MLPs.
+
+Decode attention is written so GSPMD can shard the KV-cache *sequence* dim:
+scores/softmax/value-combine keep S as a contraction dim, letting XLA lower
+the distributed-softmax (flash-decoding) pattern with small collectives.
+
+When ``use_pallas`` is enabled (TPU), attention and RMSNorm route to the
+Pallas kernels in ``repro.kernels`` (the paper's "manually implemented
+well-optimized big operations").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.annotate import BATCH, ann
+
+# toggled by configs/launchers; False on CPU (Pallas only interprets there)
+_USE_PALLAS = False
+
+
+def set_use_pallas(flag: bool):
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+def rmsnorm(x, weight, eps=1e-6):
+    if _USE_PALLAS:
+        from repro.kernels.ops import rmsnorm as k_rmsnorm
+        return k_rmsnorm(x, weight, eps=eps)
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+def rope_freqs(positions, head_dim, theta):
+    """positions: int (...,) -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, hd); cos/sin: (..., S, hd//2) broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # add head dim
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)  # rotation in f32, stream stays bf16
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+def _softcap(scores, cap):
+    if cap is None:
+        return scores
+    return jnp.tanh(scores / cap) * cap
+
+
+# Above this many query rows, attention runs in unrolled query chunks so the
+# (Sq, Sk) score matrix never materializes whole (flash-style blocking; the
+# unrolled loop also keeps cost_analysis exact — lax.scan bodies are counted
+# once by XLA's analysis).
+ATTN_Q_CHUNK = 1024
+
+
+def gqa_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                  q_offset=0):
+    """Grouped-query attention.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, K, hd) with H % K == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``window``: sliding window in tokens (None = full).
+    """
+    B, Sq, H, hd = q.shape
+
+    if _USE_PALLAS and Sq > 1:
+        from repro.kernels.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, q_offset=q_offset)
+
+    from repro.perf_flags import FLAGS
+    qc = FLAGS.attn_q_chunk
+    if Sq > qc and FLAGS.attn_chunk_parallel:
+        return _attention_chunk_parallel(q, k, v, causal=causal,
+                                         window=window, softcap=softcap,
+                                         q_offset=q_offset, qc=qc)
+    if Sq > qc:
+        Sk = k.shape[1]
+        nc = (Sq + qc - 1) // qc
+        outs = []
+        for c in range(nc):
+            lo = c * qc
+            hi = min(Sq, lo + qc)
+            kc, vc, k0 = k, v, 0
+            if (FLAGS.window_slice and window is not None and causal
+                    and q_offset == 0):
+                # §Perf: keys outside [lo-window+1, hi) are masked anyway —
+                # slice them out (static bounds): O(S·W) not O(S²)
+                k0 = max(0, lo - window + 1)
+                kend = min(Sk, hi)
+                kc, vc = k[:, k0:kend], v[:, k0:kend]
+            outs.append(_attention_dense(
+                q[:, lo:hi], kc, vc, causal=causal, window=window,
+                softcap=softcap, q_offset=q_offset + lo - k0))
+        return jnp.concatenate(outs, axis=1)
+    return _attention_dense(q, k, v, causal=causal, window=window,
+                            softcap=softcap, q_offset=q_offset)
+
+
+def _attention_chunk_parallel(q, k, v, *, causal, window, softcap,
+                              q_offset, qc):
+    """Blockwise attention with the q-chunk dim sharded over "model".
+
+    All chunks compute in parallel across model ranks (k/v replicated);
+    the output lands S-block-sharded, composing with the sequence-parallel
+    residual stream.  Scores/probs per device are 1/|model| of the full
+    (Sq, Sk) matrix.
+    """
+    from repro.perf_flags import FLAGS
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+    pad = (-Sq) % qc
+    if pad:
+        q = jnp.pad(q, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    nc = (Sq + pad) // qc
+    qr = q.reshape(B, nc, qc, K, G, hd)
+    qr = ann(qr, BATCH, "model", None, None, None, None)
+
+    scores = jnp.einsum("bnqkgh,bskh->bnkgqs", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    qpos = (jnp.arange(nc)[:, None] * qc + jnp.arange(qc)[None]) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((nc, qc, Sk), bool)
+    if causal:
+        mask &= kpos[None, None] <= qpos[:, :, None]
+    if window is not None:
+        mask &= kpos[None, None] > qpos[:, :, None] - window
+    scores = jnp.where(mask[None, :, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if FLAGS.probs_bf16:
+        probs = probs.astype(q.dtype)
+        out = jnp.einsum("bnkgqs,bskh->bnqkgh", probs, v)
+    else:
+        out = jnp.einsum("bnkgqs,bskh->bnqkgh", probs,
+                         v.astype(jnp.float32))
+    out = out.reshape(B, Sq + pad, H, hd)
+    if pad:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def _attention_dense(q, k, v, *, causal, window, softcap, q_offset):
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    from repro.perf_flags import FLAGS
+    if FLAGS.attn_probs_seq_shard:
+        scores = ann(scores, BATCH, None, None, None, "model")
+    probs = jax.nn.softmax(scores, axis=-1)
+    if FLAGS.attn_probs_seq_shard:
+        probs = ann(probs, BATCH, None, None, None, "model")
+    if FLAGS.probs_bf16:
+        # §Perf: f32 softmax, bf16 PV matmul (halves the probs buffers)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(q.dtype), v)
+    else:
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    if FLAGS.attn_probs_seq_shard:
+        # pin the per-chunk PV output REPLICATED over model so the S-sharded
+        # probs contract locally (partial-sum + small all-reduce) instead of
+        # the partitioner replicating the whole probs tensor per chunk
+        out = ann(out, BATCH, None, None, None, None)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None):
+    """One-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, S, K, hd); cache_len: filled length
+    (static or traced int). Positions >= cache_len are masked out.
+    S is a pure contraction dim — shard it and GSPMD emits the
+    flash-decoding distributed softmax.
+    """
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    kpos = jnp.arange(S)
+    valid = kpos < cache_len
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + attn + out-proj)
+
+def attn_project_qkv(p, x, cfg):
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    # megatron: batch over data axes, heads over model (ann drops an axis
+    # when the dim is not divisible, e.g. kv=8 heads on a 16-way model axis)
+    q = ann(q, BATCH, None, "model", None)
+    k = ann(k, BATCH, None, "model", None)
+    v = ann(v, BATCH, None, "model", None)
+    return q, k, v
+
+
+def attn_block(p, x, cfg, spec, positions=None, rope=True):
+    """Full-sequence attention block (training / prefill).
+
+    Returns (out, (k, v)) — the kv tensors become the prefill cache.
+    """
+    B, S, D = x.shape
+    q, k, v = attn_project_qkv(p, x, cfg)
+    if rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = rope_freqs(pos, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = gqa_attention(q, k, v, causal=(spec.attn != "bidir"),
+                        window=spec.window, softcap=cfg.attn_softcap)
+    out = ann(out, BATCH, None, "model", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    # sequence-parallel output: the heads-contraction all-reduce becomes a
+    # reduce-scatter over S
+    return ann(out, BATCH, "model", None), (k, v)
+
+
+def attn_block_decode(p, x, cache_k, cache_v, pos, cfg, spec):
+    """Single-token decode step. x: (B, 1, D); caches: (B, S, K, hd);
+    pos: scalar absolute position. Returns (out, new_k_cache, new_v_cache).
+    For windowed layers the cache is a ring buffer of size ``window``."""
+    q, k, v = attn_project_qkv(p, x, cfg)
+    cos, sin = rope_freqs(jnp.asarray(pos)[None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k = apply_rope(k, cos[None], sin[None])
+    S = cache_k.shape[1]
+    slot = jnp.asarray(pos) % S  # ring for windowed caches; identity else
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    cache_len = jnp.minimum(jnp.asarray(pos) + 1, S)
+    # NOTE: windowing is enforced by ring-buffer SIZING (cache ring == window
+    # for windowed layers), not by a position mask — ring slots are not in
+    # position order.
+    out = decode_attention(q, cache_k, cache_v, cache_len,
+                           softcap=cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, cache_k, cache_v
+
+
+def cross_attn_block(p, x, enc_kv, cfg):
+    """Decoder cross-attention to encoder output (whisper)."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = enc_kv
+    out = gqa_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+def mlp_block(p, x, kind):
+    hid = lambda h: ann(h, BATCH, None, "model")   # F over model
+    if kind == "swiglu":
+        h = hid(jax.nn.silu(x @ p["wg"]) * (x @ p["wu"]))
+    elif kind == "geglu":
+        h = hid(jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"]))
+    elif kind == "gelu":
+        h = hid(jax.nn.gelu(x @ p["wu"], approximate=True))
+    else:
+        raise ValueError(kind)
+    return ann(h @ p["wd"], BATCH, "model", None)  # sequence-parallel out

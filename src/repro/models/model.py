@@ -1,0 +1,79 @@
+"""Model facade: functional entry points bound to an ArchConfig."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from . import transformer as T
+
+
+class Model:
+    """Thin functional wrapper: all methods are pure and jit-able."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- params -----------------------------------------------------------
+    def init(self, key):
+        return T.init_params(self.cfg, key)
+
+    def param_specs(self):
+        """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+        return jax.eval_shape(lambda: T.init_params(self.cfg,
+                                                    jax.random.PRNGKey(0)))
+
+    # -- steps --------------------------------------------------------------
+    def loss(self, params, batch):
+        return T.forward_loss(params, batch, self.cfg)
+
+    def prefill(self, params, batch, pad_to=None):
+        return T.prefill(params, batch, self.cfg, pad_to=pad_to)
+
+    def decode(self, params, cache, batch):
+        return T.decode_step(params, cache, batch, self.cfg)
+
+    def make_cache(self, batch: int, seq_len: int):
+        return T.make_cache(self.cfg, batch, seq_len)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: T.make_cache(self.cfg, batch, seq_len))
+
+    # -- batch specs ----------------------------------------------------------
+    def batch_specs(self, shape_kind: str, global_batch: int, seq_len: int):
+        """ShapeDtypeStruct stand-ins for every model input (§input_specs)."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        f32 = jnp.float32
+        if shape_kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((global_batch, 1), i32)}
+        S = seq_len
+        batch = {}
+        if cfg.encoder_layers:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.frontend_tokens, cfg.frontend_dim), f32)
+        elif cfg.frontend_tokens:
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (global_batch, cfg.frontend_tokens, cfg.frontend_dim), f32)
+            S = seq_len - cfg.frontend_tokens  # text + prefix == seq_len
+        batch["tokens"] = jax.ShapeDtypeStruct((global_batch, S), i32)
+        return batch
+
+    def make_batch(self, key, shape_kind: str, global_batch: int,
+                   seq_len: int):
+        """Synthetic concrete batch matching batch_specs (smoke tests)."""
+        specs = self.batch_specs(shape_kind, global_batch, seq_len)
+        out = {}
+        for name, s in specs.items():
+            key, sub = jax.random.split(key)
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(sub, s.shape, 0, self.cfg.vocab)
+            else:
+                out[name] = jax.random.normal(sub, s.shape, s.dtype)
+        return out
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,203 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with static expert
+capacity and GROUPED dispatch (GShard-style).
+
+TPU adaptation: the scatter/gather dispatch runs *locally* under
+``shard_map`` over the data axes (each data shard slots its own tokens
+into its local (B_loc, E, C, D) buffer — no partitioner involvement, which
+otherwise replicates batched scatters), while the expert FFN einsum runs
+under GSPMD with experts sharded over the "model" axis — the
+group->expert resharding is the all-to-all of expert parallelism.
+
+Capacity is per group (= batch row): C = ceil(S·k/E · capacity_factor);
+overflow tokens are dropped (contribute zero), exactly like GShard/Switch.
+
+Aux losses: Switch load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.annotate import BATCH, ann, _mesh_axes
+
+
+def moe_router(p, x, cfg):
+    """x: (B, S, D) -> weights (B,S,k), experts (B,S,k), aux."""
+    from repro.perf_flags import FLAGS
+    if FLAGS.router_no_f32_copy:
+        # §Perf: f32 ACCUMULATION without materializing an f32 copy of x
+        # (the copy doubles the reshard bytes of the sequence-parallel x)
+        logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+
+    E = cfg.n_experts
+    f = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    pbar = probs.mean((0, 1))
+    lb = E * jnp.sum(f * pbar)
+    z = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    return w.astype(x.dtype), idx, {"load_balance": lb, "router_z": z}
+
+
+# ---------------------------------------------------------------------------
+# local (per data-shard) dispatch/combine bodies
+
+
+def _slots(flat_e, E, C):
+    """Position of each (token, choice) within its expert's capacity."""
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (B, S*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(pos_in_e, flat_e[..., None], 2)[..., 0]
+    keep = slot < C
+    return jnp.where(keep, slot, 0), keep
+
+
+def _dispatch_local(x, flat_e, flat_t, E, C):
+    """x: (B, S, D) local. Returns buf (B, E, C, D), s_idx, keep."""
+    B = x.shape[0]
+    Sk = flat_e.shape[1]
+    s_idx, keep = _slots(flat_e, E, C)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sk))
+    e_idx = jnp.where(keep, flat_e, 0)
+    xt = jnp.take_along_axis(x, flat_t[..., None], axis=1)   # (B, S*k, D)
+    contrib = jnp.where(keep[..., None], xt, 0)
+    buf = jnp.zeros((B, E, C, x.shape[-1]), x.dtype)
+    buf = buf.at[bidx, e_idx, s_idx].add(contrib, mode="drop")
+    return buf, s_idx, keep
+
+
+def _combine_local(y, flat_e, flat_t, flat_w, s_idx, keep, S):
+    """y: (B, E, C, D) local -> (B, S, D)."""
+    B, E, C, D = y.shape
+    Sk = flat_e.shape[1]
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, Sk))
+    e_idx = jnp.where(keep, flat_e, 0)
+    gathered = y[bidx, e_idx, s_idx]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = jnp.zeros((B, S, D), y.dtype)
+    out = out.at[bidx, flat_t].add(gathered * flat_w[..., None].astype(y.dtype))
+    return out
+
+
+def _data_shard_map(f, n_in, n_out, batch_dim: int = 0, batch_size=None):
+    """Run f under shard_map over the data axes (manual) with "model" left
+    auto; identity passthrough when no mesh is active (CPU tests) or when
+    the batch dim does not divide the data axes (e.g. batch-1 long-context
+    decode — the local code is then simply global)."""
+    axes, sizes = _mesh_axes()
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    if not dp:
+        return f
+    n = 1
+    for a in dp:
+        n *= sizes[a]
+    if batch_size is not None and batch_size % n != 0:
+        return f
+    spec_in = tuple(P(dp) for _ in range(n_in))
+    spec_out = tuple(P(dp) for _ in range(n_out)) if n_out > 1 else P(dp)
+    return jax.shard_map(f, in_specs=spec_in, out_specs=spec_out,
+                         axis_names=set(dp), check_vma=False)
+
+
+def _dispatch_local_kloop(x, idx, k, E, C):
+    """k compact scatters: buf from x (B,S,D) without (B,S*k,D).
+
+    idx: (B, S, k). Returns buf (B,E,C,D), s_idx (B,S,k), keep (B,S,k).
+    """
+    B, S, D = x.shape
+    flat_e = idx.reshape(B, S * k)
+    s_flat, keep_flat = _slots(flat_e, E, C)
+    s_idx = s_flat.reshape(B, S, k)
+    keep = keep_flat.reshape(B, S, k)
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    for j in range(k):
+        e_j = jnp.where(keep[..., j], idx[..., j], 0)
+        s_j = jnp.where(keep[..., j], s_idx[..., j], 0)
+        contrib = jnp.where(keep[..., j, None], x, 0)
+        buf = buf.at[bidx, e_j, s_j].add(contrib, mode="drop")
+    return buf, s_idx, keep
+
+
+def _combine_local_kloop(y, idx, w, s_idx, keep):
+    """k compact gathers from y (B,E,C,D) -> (B,S,D)."""
+    B, E, C, D = y.shape
+    S, k = idx.shape[1], idx.shape[2]
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    out = jnp.zeros((B, S, D), y.dtype)
+    for j in range(k):
+        e_j = jnp.where(keep[..., j], idx[..., j], 0)
+        s_j = jnp.where(keep[..., j], s_idx[..., j], 0)
+        g = y[bidx, e_j, s_j]                       # (B, S, D)
+        g = jnp.where(keep[..., j, None], g, 0)
+        out = out + g * w[..., j, None].astype(y.dtype)
+    return out
+
+
+def moe_block(p, x, cfg, mlp_kind="swiglu"):
+    """x: (B, S, D) -> (B, S, D), aux. Grouped dispatch: group == batch row."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(np.ceil(S * k / E * cfg.capacity_factor)), 1)
+
+    from repro.perf_flags import FLAGS
+    if FLAGS.moe_gather_once:
+        # §Perf: gather the sequence-parallel residual ONCE, compact and
+        # bf16, before the S*k-expanded dispatch tensors exist
+        x = ann(x, BATCH, None, None)
+    w, idx, aux = moe_router(p, x, cfg)            # (B,S,k)
+
+    if FLAGS.moe_k_loop:
+        disp = _data_shard_map(
+            lambda xx, ii: _dispatch_local_kloop(xx, ii, k, E, C), 2, 3,
+            batch_size=B)
+        buf, s_idx, keep = disp(x, idx)
+    else:
+        flat_e = idx.reshape(B, S * k)
+        flat_w = w.reshape(B, S * k)
+        flat_t = jnp.tile(jnp.repeat(jnp.arange(S), k)[None], (B, 1))
+        disp = _data_shard_map(
+            lambda xx, fe, ft: _dispatch_local(xx, fe, ft, E, C), 3, 3,
+            batch_size=B)
+        buf, s_idx, keep = disp(x, flat_e, flat_t)
+    # batch over data, experts over model: this reshard is the all-to-all
+    buf = ann(buf, BATCH, "model", None, None)
+
+    if mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_kind == "swiglu" else (
+            lambda a: jax.nn.gelu(a, approximate=True))
+        h = act(jnp.einsum("becd,edf->becf", buf, p["wg"])) \
+            * jnp.einsum("becd,edf->becf", buf, p["wu"])
+        y = jnp.einsum("becf,efd->becd", h, p["wd"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["wu"]),
+                        approximate=True)
+        y = jnp.einsum("becf,efd->becd", h, p["wd"])
+    y = ann(y, BATCH, "model", None, None)
+
+    if FLAGS.moe_k_loop:
+        comb = _data_shard_map(
+            lambda yy, ii, ww, si, kp: _combine_local_kloop(yy, ii, ww, si,
+                                                            kp), 5, 1,
+            batch_size=B)
+        out = comb(y, idx, w, s_idx, keep)
+    else:
+        comb = _data_shard_map(
+            lambda yy, fe, ft, fw, si, kp: _combine_local(yy, fe, ft, fw,
+                                                          si, kp, S), 6, 1,
+            batch_size=B)
+        out = comb(y, flat_e, flat_t, flat_w, s_idx, keep)
+    out = ann(out, BATCH, None, None)
+
+    if cfg.shared_expert:
+        hs = jax.nn.silu(x @ p["shared_wg"]) * (x @ p["shared_wu"])
+        hs = ann(hs, BATCH, None, "model")
+        out = out + hs @ p["shared_wd"]
+    return out, aux

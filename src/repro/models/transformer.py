@@ -1,0 +1,520 @@
+"""Generic pattern-based transformer LM covering all assigned families:
+dense GQA, MoE, SSM (mamba2), hybrid (jamba), VLM prefix (internvl2) and
+enc-dec (whisper).
+
+Layers repeat a *pattern* of LayerSpecs; same-position blocks are stacked
+on a leading n_super axis and run under ``lax.scan`` (small HLO at 80L).
+
+Entry points:
+  init_params(cfg, key)             real weights (smoke tests)
+  loss_fn(cfg)(params, batch)       next-token CE + MoE aux
+  prefill_fn(cfg)(params, batch)    forward + KV/SSM cache construction
+  decode_fn(cfg)(params, cache, batch, pos)   one-token serve step
+  make_cache(cfg, B, cache_len)     zeroed cache pytree
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.annotate import BATCH, ann
+
+from .common import ArchConfig, LayerSpec
+from .layers import (attn_block, attn_block_decode, cross_attn_block,
+                     gqa_attention, mlp_block, rmsnorm)
+from .moe import moe_block
+from .ssm import mamba_block
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or (1.0 / np.sqrt(shape[0]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attn_params(key, cfg: ArchConfig, cross=False):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.activation_dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (D, H, hd), dt),
+        "wk": _dense(ks[1], (D, K, hd), dt),
+        "wv": _dense(ks[2], (D, K, hd), dt),
+        "wo": _dense(ks[3], (H, hd, D), dt, scale=1.0 / np.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((K, hd), dt)
+        p["bv"] = jnp.zeros((K, hd), dt)
+    return p
+
+
+def init_mlp_params(key, cfg: ArchConfig, kind: str):
+    D, F = cfg.d_model, cfg.d_ff
+    dt = cfg.activation_dtype()
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wg": _dense(ks[0], (D, F), dt), "wu": _dense(ks[1], (D, F), dt),
+                "wd": _dense(ks[2], (F, D), dt)}
+    return {"wu": _dense(ks[0], (D, F), dt), "wd": _dense(ks[1], (F, D), dt)}
+
+
+def init_moe_params(key, cfg: ArchConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.activation_dtype()
+    ks = jax.random.split(key, 7)
+    p = {"router": _dense(ks[0], (D, E), jnp.float32),
+         "wg": _dense(ks[1], (E, D, F), dt, scale=1.0 / np.sqrt(D)),
+         "wu": _dense(ks[2], (E, D, F), dt, scale=1.0 / np.sqrt(D)),
+         "wd": _dense(ks[3], (E, F, D), dt, scale=1.0 / np.sqrt(F))}
+    if cfg.shared_expert:
+        p["shared_wg"] = _dense(ks[4], (D, F), dt)
+        p["shared_wu"] = _dense(ks[5], (D, F), dt)
+        p["shared_wd"] = _dense(ks[6], (F, D), dt)
+    return p
+
+
+def init_mamba_params(key, cfg: ArchConfig):
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.conv_width
+    ch = di + 2 * N
+    dt = cfg.activation_dtype()
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": _dense(ks[0], (D, 2 * di + 2 * N + H), dt),
+        "conv_w": _dense(ks[1], (W, ch), dt, scale=1.0 / np.sqrt(W)),
+        "conv_b": jnp.zeros((ch,), dt),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": _dense(ks[2], (di, D), dt),
+    }
+
+
+def init_block_params(key, cfg: ArchConfig, spec: LayerSpec):
+    dt = cfg.activation_dtype()
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((D,), dt)}
+    if spec.kind == "attn":
+        p["attn"] = init_attn_params(ks[0], cfg)
+    else:
+        p["ssm"] = init_mamba_params(ks[0], cfg)
+    if spec.cross_attn:
+        p["ln_x"] = jnp.zeros((D,), dt)
+        p["xattn"] = init_attn_params(ks[2], cfg, cross=True)
+    if spec.mlp != "none":
+        p["ln2"] = jnp.zeros((D,), dt)
+        p["moe" if spec.mlp == "moe" else "mlp"] = (
+            init_moe_params(ks[1], cfg) if spec.mlp == "moe"
+            else init_mlp_params(ks[1], cfg, spec.mlp))
+    if cfg.sandwich_norm:
+        p["ln1_post"] = jnp.zeros((D,), dt)
+        if spec.mlp != "none":
+            p["ln2_post"] = jnp.zeros((D,), dt)
+    return p
+
+
+def init_params(cfg: ArchConfig, key):
+    dt = cfg.activation_dtype()
+    keys = jax.random.split(key, 8)
+    params = {"embed": _dense(keys[0], (cfg.vocab, cfg.d_model), dt, scale=0.02),
+              "final_norm": jnp.zeros((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(keys[1], (cfg.d_model, cfg.vocab), dt)
+
+    blocks = {}
+    for i, spec in enumerate(cfg.pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[2], i), cfg.n_super)
+        blocks[f"p{i}"] = jax.vmap(
+            lambda k: init_block_params(k, cfg, spec))(bkeys)
+    params["blocks"] = blocks
+
+    if cfg.encoder_layers:  # whisper encoder stack (bidir attn + gelu mlp)
+        espec = LayerSpec(kind="attn", attn="bidir", mlp="gelu")
+        ekeys = jax.random.split(keys[3], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block_params(k, cfg, espec))(ekeys)
+        params["enc_final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.frontend_tokens:  # modality projector stub (VLM / audio)
+        params["frontend_proj"] = _dense(keys[4], (cfg.frontend_dim,
+                                                   cfg.d_model), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+
+def apply_block(p, x, cfg: ArchConfig, spec: LayerSpec, enc_kv=None,
+                positions=None):
+    """Full-sequence block (train / prefill). Returns (x, cache, aux)."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        from repro.perf_flags import FLAGS
+        if FLAGS.attn_gather_once:
+            # §Perf: one explicit bf16 gather of the sequence-parallel
+            # stream before the three qkv einsums (not three, never f32)
+            h = ann(h, BATCH, None, None)
+        h, kv = attn_block(p["attn"], h, cfg, spec, positions=positions)
+        cache = {"k": kv[0], "v": kv[1]}
+    else:
+        h, (conv_s, ssm_s) = mamba_block(p["ssm"], h, cfg)
+        cache = {"conv": conv_s, "ssm": ssm_s}
+    if cfg.sandwich_norm:
+        h = rmsnorm(h, p["ln1_post"], cfg.norm_eps)
+    x = x + h
+
+    if spec.cross_attn:
+        h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        h = cross_attn_block(p["xattn"], h, enc_kv, cfg)
+        x = x + h
+
+    aux = {"load_balance": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            h, aux = moe_block(p["moe"], h, cfg)
+            aux = {k: v.astype(jnp.float32) for k, v in aux.items()}
+        else:
+            h = mlp_block(p["mlp"], h, spec.mlp)
+        if cfg.sandwich_norm:
+            h = rmsnorm(h, p["ln2_post"], cfg.norm_eps)
+        x = x + h
+    return x, cache, aux
+
+
+def apply_block_decode(p, x, cache, pos, cfg: ArchConfig, spec: LayerSpec,
+                       enc_kv=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        h, ck, cv = attn_block_decode(p["attn"], h, cache["k"], cache["v"],
+                                      pos, cfg, spec)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        h, (conv_s, ssm_s) = mamba_block(p["ssm"], h, cfg,
+                                         conv_state=cache["conv"],
+                                         ssm_state=cache["ssm"], decode=True)
+        new_cache = {"conv": conv_s, "ssm": ssm_s}
+    if cfg.sandwich_norm:
+        h = rmsnorm(h, p["ln1_post"], cfg.norm_eps)
+    x = x + h
+    if spec.cross_attn:
+        h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        h = cross_attn_block(p["xattn"], h, enc_kv, cfg)
+        x = x + h
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            h, _ = moe_block(p["moe"], h, cfg)
+        else:
+            h = mlp_block(p["mlp"], h, spec.mlp)
+        if cfg.sandwich_norm:
+            h = rmsnorm(h, p["ln2_post"], cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder
+
+def run_encoder(params, frames, cfg: ArchConfig):
+    """frames: (B, T_enc, frontend_dim) stub embeddings -> (B, T_enc, D)."""
+    x = frames.astype(cfg.activation_dtype()) @ params["frontend_proj"]
+    espec = LayerSpec(kind="attn", attn="bidir", mlp="gelu")
+
+    def body(x, p):
+        x, _, _ = apply_block(p, x, cfg, espec)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def encoder_cross_kv(params, enc_out, cfg):
+    """Precompute per-(pattern-position) cross K/V from encoder output."""
+    kvs = {}
+    for i, spec in enumerate(cfg.pattern):
+        if not spec.cross_attn:
+            continue
+        bp = params["blocks"][f"p{i}"]
+
+        def kv(bp_i):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, bp_i["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, bp_i["xattn"]["wv"])
+            return k, v
+        kvs[f"p{i}"] = jax.vmap(kv)(bp)  # stacked over n_super
+    return kvs
+
+
+# ---------------------------------------------------------------------------
+# full model
+
+def embed_tokens(params, tokens, cfg):
+    x = params["embed"][tokens]
+    # residual stream: batch over data axes, SEQUENCE over "model" between
+    # blocks (sequence parallelism: the saved/remat activations are 1/|model|
+    # the size; attention/MLP gather S and return reduce-scattered partials)
+    return ann(x.astype(cfg.activation_dtype()), BATCH, "model", None)
+
+
+def final_logits(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def run_stack(params, x, cfg: ArchConfig, enc_kvs=None, positions=None,
+              collect_cache=False):
+    """Scan the super-block stack. Returns (x, caches, aux_totals)."""
+    pattern = cfg.pattern
+
+    def body(carry, xs):
+        x, lb, rz = carry
+        x = ann(x, BATCH, "model", None)   # sequence-parallel between blocks
+        bp = xs["params"]
+        caches = {}
+        for i, spec in enumerate(pattern):
+            enc_kv = None
+            if spec.cross_attn and enc_kvs is not None:
+                enc_kv = xs["enc"][f"p{i}"]
+            x, cache, aux = apply_block(bp[f"p{i}"], x, cfg, spec,
+                                        enc_kv=enc_kv, positions=positions)
+            caches[f"p{i}"] = cache
+            lb = lb + aux["load_balance"]
+            rz = rz + aux["router_z"]
+        out = caches if collect_cache else None
+        return (x, lb, rz), out
+
+    if cfg.remat:
+        # save only each super-block's input (x, carry); recompute the rest
+        # in backward — the remat analogue of §3.1 memory planning
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = {"params": params["blocks"]}
+    if enc_kvs is not None:
+        xs["enc"] = enc_kvs
+    if cfg.n_super <= 4:
+        # unrolled: exact cost_analysis for the roofline probes (scan bodies
+        # are counted once by XLA's analysis)
+        carry = (x, 0.0, 0.0)
+        ys = []
+        for i in range(cfg.n_super):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        (x, lb, rz) = carry
+        caches = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+                  if collect_cache else None)
+    else:
+        (x, lb, rz), caches = jax.lax.scan(body, (x, 0.0, 0.0), xs)
+    return x, caches, {"load_balance": lb, "router_z": rz}
+
+
+def forward_loss(params, batch, cfg: ArchConfig):
+    """Next-token CE loss. batch: tokens (B,S) [+ patches/frames]."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    prefix = 0
+    enc_kvs = None
+    if cfg.encoder_layers:                      # whisper: enc-dec
+        enc_out = run_encoder(params, batch["frames"], cfg)
+        enc_kvs = encoder_cross_kv(params, enc_out, cfg)
+    elif cfg.frontend_tokens:                   # VLM: prefix patch embeds
+        pre = batch["patches"].astype(cfg.activation_dtype()) \
+            @ params["frontend_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+        prefix = pre.shape[1]
+
+    x, _, aux = run_stack(params, x, cfg, enc_kvs=enc_kvs)
+    loss = chunked_ce_loss(params, x[:, prefix:], tokens, cfg)
+    total = loss + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+    return total, {"ce": loss, **aux}
+
+
+# number of unrolled head chunks for the CE loss (memory: per-device logits
+# never exceed ~tokens/NC × V/model_shards × 4B)
+CE_CHUNKS = 16
+
+
+def chunked_ce_loss(params, x, tokens, cfg: ArchConfig):
+    """Next-token CE without materializing the full (B, S, V) logits.
+
+    Chunks run along the SEQUENCE axis (batch stays sharded over the data
+    axes; slicing the flattened token dim would break the sharding) in an
+    unrolled loop — roofline-exact, and XLA frees each chunk's logits
+    before the next.
+    """
+    from repro.perf_flags import FLAGS
+    B, S, D = x.shape
+    x = ann(x, BATCH, None, None)        # gather S: chunks slice along S
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    xs = x[:, :-1]                       # (B, S-1, D)
+    tg = tokens[:, 1:]
+    n_tok = S - 1
+    nc = min(FLAGS.ce_chunks, n_tok)
+    pad = (-n_tok) % nc
+    if pad:
+        xs = jnp.pad(xs, [(0, 0), (0, pad), (0, 0)])
+        tg = jnp.pad(tg, [(0, 0), (0, pad)])
+    wts = None
+    if pad:
+        wts = jnp.concatenate([jnp.ones((n_tok,), jnp.float32),
+                               jnp.zeros((pad,), jnp.float32)])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    csz = xs.shape[1] // nc
+
+    def chunk_nll(xc, tc, wc):
+        logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+        logits = ann(logits, BATCH, None, "model")
+        if cfg.final_softcap:
+            logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+        lp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(lp, tc[..., None], -1)[..., 0]
+        if wc is not None:
+            nll = nll * wc[None, :]
+        return nll.sum()
+
+    if cfg.remat:  # recompute chunk logits in backward: O(B·csz·V) live, once
+        chunk_nll = jax.checkpoint(chunk_nll, prevent_cse=False)
+    total = 0.0
+    for c in range(nc):
+        total = total + chunk_nll(
+            xs[:, c * csz:(c + 1) * csz], tg[:, c * csz:(c + 1) * csz],
+            None if wts is None else wts[c * csz:(c + 1) * csz])
+    return total / (B * n_tok)
+
+
+def _fixup_prefill_cache(caches, cfg: ArchConfig, S: int, pad_to: int | None):
+    """Convert full-length prefill KV to decode layout: windowed layers get
+    ring-ordered last-``window`` entries; full layers optionally pad the S
+    axis to ``pad_to`` for decode headroom."""
+    out = {}
+    for i, spec in enumerate(cfg.pattern):
+        c = caches[f"p{i}"]
+        if spec.kind != "attn":
+            out[f"p{i}"] = c
+            continue
+        k, v = c["k"], c["v"]          # (n_super, B, S, K, hd)
+        if spec.window is not None:
+            # buffer = min(window, max(S, pad_to)): ring once past window,
+            # padded headroom before that
+            target = min(spec.window, max(S, pad_to or S))
+            if S > target:             # ring of exactly `window`
+                s0 = (S - target) % target
+                k = jnp.roll(k[:, :, -target:], s0, axis=2)
+                v = jnp.roll(v[:, :, -target:], s0, axis=2)
+            elif target > S:           # decode headroom below the window
+                pad = [(0, 0), (0, 0), (0, target - S), (0, 0), (0, 0)]
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        elif pad_to and pad_to > k.shape[2]:
+            pad = [(0, 0), (0, 0), (0, pad_to - k.shape[2]), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        out[f"p{i}"] = {"k": k, "v": v}
+    return out
+
+
+def prefill(params, batch, cfg: ArchConfig, pad_to: int | None = None):
+    """Forward building caches; returns (last_logits, cache_pytree)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    enc_kvs = None
+    extra = {}
+    if cfg.encoder_layers:
+        enc_out = run_encoder(params, batch["frames"], cfg)
+        enc_kvs = encoder_cross_kv(params, enc_out, cfg)
+        extra["enc_kvs"] = enc_kvs
+    elif cfg.frontend_tokens:
+        pre = batch["patches"].astype(cfg.activation_dtype()) \
+            @ params["frontend_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    x, caches, _ = run_stack(params, x, cfg, enc_kvs=enc_kvs,
+                             collect_cache=True)
+    S = x.shape[1]
+    caches = _fixup_prefill_cache(caches, cfg, S, pad_to)
+    logits = final_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], {"layers": caches, **extra,
+                          "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig):
+    """One-token serve step. batch: {"tokens": (B, 1)}; cache from
+    make_cache/prefill. Returns (logits (B, V), new_cache)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    pos = cache["pos"]
+    pattern = cfg.pattern
+    enc_kvs = cache.get("enc_kvs")
+
+    def body(x, xs):
+        bp, layer_cache = xs["params"], xs["cache"]
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            enc_kv = xs["enc"][f"p{i}"] if (spec.cross_attn and
+                                            enc_kvs is not None) else None
+            x, nc = apply_block_decode(bp[f"p{i}"], x, layer_cache[f"p{i}"],
+                                       pos, cfg, spec, enc_kv=enc_kv)
+            new_caches[f"p{i}"] = nc
+        return x, new_caches
+
+    xs = {"params": params["blocks"], "cache": cache["layers"]}
+    if enc_kvs is not None:
+        xs["enc"] = enc_kvs
+    if cfg.n_super <= 4:
+        ys = []
+        for i in range(cfg.n_super):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        new_layers = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        x, new_layers = jax.lax.scan(body, x, xs)
+    logits = final_logits(params, x[:, -1:], cfg)
+    new_cache = {**cache, "layers": new_layers, "pos": pos + 1}
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction (decode entry without a real prefill — dry-run path)
+
+def cache_len_for(cfg: ArchConfig, spec: LayerSpec, seq_len: int) -> int:
+    if spec.window is not None:
+        return min(seq_len, spec.window)
+    return seq_len
+
+
+def make_cache(cfg: ArchConfig, batch: int, seq_len: int, enc_len: int = 0):
+    """Zeroed cache pytree sized for ``seq_len`` context (ring-buffered to
+    ``window`` for windowed layers)."""
+    dt = cfg.activation_dtype()
+    K, hd = cfg.n_kv_heads, cfg.hd
+    layers = {}
+    for i, spec in enumerate(cfg.pattern):
+        n = cfg.n_super
+        if spec.kind == "attn":
+            S = cache_len_for(cfg, spec, seq_len)
+            layers[f"p{i}"] = {
+                "k": jnp.zeros((n, batch, S, K, hd), dt),
+                "v": jnp.zeros((n, batch, S, K, hd), dt)}
+        else:
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            layers[f"p{i}"] = {
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, ch), dt),
+                "ssm": jnp.zeros((n, batch, cfg.ssm_heads, cfg.ssm_p,
+                                  cfg.ssm_state), jnp.float32)}
+    cache = {"layers": layers, "pos": jnp.asarray(seq_len - 1, jnp.int32)}
+    if cfg.encoder_layers:
+        enc_len = enc_len or cfg.frontend_tokens
+        kvs = {}
+        for i, spec in enumerate(cfg.pattern):
+            if spec.cross_attn:
+                kvs[f"p{i}"] = (jnp.zeros((cfg.n_super, batch, enc_len, K, hd), dt),
+                                jnp.zeros((cfg.n_super, batch, enc_len, K, hd), dt))
+        cache["enc_kvs"] = kvs
+    return cache

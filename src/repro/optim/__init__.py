@@ -1,0 +1,5 @@
+from .optimizers import sgd, sgd_momentum, adam, adamw, apply_updates
+from .schedule import constant, cosine, warmup_cosine
+
+__all__ = ["sgd", "sgd_momentum", "adam", "adamw", "apply_updates",
+           "constant", "cosine", "warmup_cosine"]

@@ -1,0 +1,96 @@
+"""Optimizers (MXNet §2.4 training module) as pure (init, update) pairs.
+
+Every optimizer keeps fp32 master state shaped/sharded like the params.
+The SGD-momentum update can route through the fused Pallas kernel
+(``use_pallas=True``) — the KVStore updater as a mutating big-op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable  # (grads, state, params) -> (updates_applied_params, state)
+
+
+def _f32_like(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr=1e-2, weight_decay=0.0):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        def upd(p, g):
+            g32 = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * lr_scale * g32).astype(p.dtype)
+        return (jax.tree.map(upd, params, grads),
+                {"step": state["step"] + 1})
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr=1e-2, mu=0.9, weight_decay=1e-4, use_pallas=False):
+    def init(params):
+        return {"mom": _f32_like(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        if use_pallas:
+            from repro.kernels.ops import sgd_momentum as fused
+
+            def upd(p, g, m):
+                return fused(p, g, m, lr=lr * lr_scale, mu=mu,
+                             weight_decay=weight_decay)
+        else:
+            def upd(p, g, m):
+                g32 = (g.astype(jnp.float32)
+                       + weight_decay * p.astype(jnp.float32))
+                m = mu * m + g32
+                return (p.astype(jnp.float32)
+                        - lr * lr_scale * m).astype(p.dtype), m
+        pairs = jax.tree.map(upd, params, grads, state["mom"])
+        new_p = jax.tree.map(lambda t: t[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mom": new_m, "step": state["step"] + 1}
+    return Optimizer(init, update)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        return {"m": _f32_like(params), "v": _f32_like(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_scale=1.0):
+        t = state["step"] + 1
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            step = lr * lr_scale * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+        tri = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is_l = lambda x: isinstance(x, tuple)
+        return (jax.tree.map(lambda t: t[0], tri, is_leaf=is_l),
+                {"m": jax.tree.map(lambda t: t[1], tri, is_leaf=is_l),
+                 "v": jax.tree.map(lambda t: t[2], tri, is_leaf=is_l),
+                 "step": t})
+    return Optimizer(init, update)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01):
+    return adam(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def apply_updates(optimizer: Optimizer, grads, state, params, lr_scale=1.0):
+    return optimizer.update(grads, state, params, lr_scale=lr_scale)

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value=1.0):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine(total_steps, final_frac=0.1):
+    def f(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def warmup_cosine(warmup_steps, total_steps, final_frac=0.1):
+    cos = cosine(max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        w = jnp.clip(step / max(warmup_steps, 1), 0.0, 1.0)
+        return jnp.where(step < warmup_steps, w, cos(step - warmup_steps))
+    return f

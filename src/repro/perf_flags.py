@@ -1,0 +1,70 @@
+"""Performance-variant flags for §Perf hillclimbing.
+
+Each flag toggles one optimization hypothesis; the baseline (paper-faithful
+reproduction) is all-defaults.  ``benchmarks/perf_probe.py`` recompiles a
+given (arch × shape) pair under a set of flags and reports the roofline
+terms, so every hillclimb iteration is one CLI call.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class PerfFlags:
+    # slice k/v to the sliding window per query chunk (windowed layers):
+    # attention work drops from O(S^2) to O(S·W)
+    window_slice: bool = False
+    # decode cache sharding strategy: "seq" shards the cache S dim over
+    # "model" (distributed softmax); "heads" prefers KV heads over "model"
+    # (no dynamic-update-slice over a sharded dim)
+    decode_cache_shard: str = "seq"
+    # number of unrolled CE loss chunks
+    ce_chunks: int = 16
+    # dtype for the residual-stream scan carry (remat save size)
+    # "keep" = whatever the model computes (bf16 already)
+    carry_dtype: str = "keep"
+    # MoE dispatch index width (int32 default; int16 halves cumsum traffic)
+    moe_small_idx: bool = False
+    # attention q-chunk size for the unrolled flash-style loop
+    attn_q_chunk: int = 1024
+    # gather the sequence-parallel residual once (compact, bf16) before the
+    # MoE S*k-expanded dispatch / the three qkv einsums
+    moe_gather_once: bool = False
+    attn_gather_once: bool = False
+    # compute router logits without materializing an f32 copy of x
+    router_no_f32_copy: bool = False
+    # dispatch/combine as a loop over the k routing choices: compact
+    # (B,S,D) scatters/gathers, never materializing (B, S*k, D)
+    moe_k_loop: bool = False
+    # cast softmax probabilities to the activation dtype before the PV
+    # matmul (halves the dominant prefill buffers; softmax stays f32)
+    probs_bf16: bool = False
+    # vectorized chunk-parallel attention: the q-chunk dim is sharded over
+    # "model" (GQA's (K,G) head split defeats head-sharding when K,G < 16;
+    # chunk-parallelism sidesteps it and lands S-block-sharded outputs that
+    # compose with the sequence-parallel residual)
+    attn_chunk_parallel: bool = False
+    # pin scores/probs to S-sharding through softmax and let the PV matmul
+    # do a small partial-sum all-reduce — avoids the partitioner's
+    # "involuntary full rematerialization" (replicating per-chunk probs)
+    # when GQA's (K,G) split defeats head sharding
+    attn_probs_seq_shard: bool = False
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(**kw):
+    for k, v in kw.items():
+        assert hasattr(FLAGS, k), k
+        setattr(FLAGS, k, v)
+    return FLAGS
+
+
+def reset_flags():
+    global FLAGS
+    defaults = PerfFlags()
+    for k in vars(defaults):
+        setattr(FLAGS, k, getattr(defaults, k))
+    return FLAGS

@@ -1,0 +1,4 @@
+from .trainer import Trainer, TrainConfig
+from .checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["Trainer", "TrainConfig", "save_checkpoint", "load_checkpoint"]

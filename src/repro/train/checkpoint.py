@@ -1,0 +1,45 @@
+"""Checkpointing: params/opt-state/step to a directory of .npy shards with
+a JSON manifest (pytree structure + dtypes), like MXNet's save/load (§2.1).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, state: dict, step: int | None = None):
+    p = Path(path)
+    p.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(state)
+    manifest = {"treedef": str(treedef), "n_leaves": len(leaves),
+                "step": int(step) if step is not None else None,
+                "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+                "shapes": [list(np.asarray(l).shape) for l in leaves]}
+    for i, leaf in enumerate(leaves):
+        np.save(p / f"leaf_{i}.npy", np.asarray(leaf))
+    (p / "manifest.json").write_text(json.dumps(manifest))
+    return p
+
+
+def load_checkpoint(path: str, like: dict):
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    p = Path(path)
+    manifest = json.loads((p / "manifest.json").read_text())
+    leaves, treedef = jax.tree.flatten(like)
+    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    loaded = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(p / f"leaf_{i}.npy")
+        assert list(arr.shape) == list(np.asarray(ref).shape), \
+            (i, arr.shape, np.asarray(ref).shape)
+        loaded.append(arr.astype(np.asarray(ref).dtype))
+    state = jax.tree.unflatten(treedef, loaded)
+    return state, manifest.get("step")

@@ -1,0 +1,108 @@
+"""KVStore (MXNet §2.3, §3.3): aggregation, consistency, two-level bytes."""
+import numpy as np
+import pytest
+
+from repro.core import (Engine, KVStoreDist, KVStoreLocal, NDArray,
+                        reset_default_engine, sgd_updater)
+
+
+def test_local_push_aggregates_devices():
+    eng = Engine()
+    kv = KVStoreLocal(eng)
+    kv.init("w", np.zeros(4, np.float32))
+    gs = [NDArray(np.full(4, float(i + 1), np.float32), engine=eng)
+          for i in range(4)]
+    kv.push("w", gs)           # level-1 aggregation: sum = 1+2+3+4
+    out = kv.pull("w")
+    np.testing.assert_allclose(out.asnumpy(), np.full(4, 10.0))
+
+
+def test_local_custom_updater():
+    eng = Engine()
+    kv = KVStoreLocal(eng)
+    kv.set_updater(sgd_updater(lr=0.1))
+    kv.init("w", np.full(3, 1.0, np.float32))
+    kv.push("w", NDArray(np.full(3, 10.0, np.float32), engine=eng))
+    np.testing.assert_allclose(kv.pull("w").asnumpy(), np.zeros(3))
+
+
+def test_dist_sequential_barrier():
+    """No update until every worker of every machine pushed (sync SGD)."""
+    kv = KVStoreDist(n_machines=2, devices_per_machine=2,
+                     consistency="sequential")
+    kv.set_updater(lambda k, s, g: s + g)
+    kv.init("w", np.zeros(2, np.float32))
+    kv.push("w", worker=0, grad=np.ones(2, np.float32))
+    kv.push("w", worker=1, grad=np.ones(2, np.float32))
+    kv.push("w", worker=2, grad=np.ones(2, np.float32))
+    assert kv.version("w") == 0                       # barrier holds
+    kv.push("w", worker=3, grad=np.ones(2, np.float32))
+    assert kv.version("w") == 1
+    np.testing.assert_allclose(np.asarray(kv.pull("w", 0)), np.full(2, 4.0))
+
+
+def test_dist_eventual_applies_per_machine():
+    kv = KVStoreDist(n_machines=2, devices_per_machine=1,
+                     consistency="eventual", staleness=1)
+    kv.init("w", np.zeros(2, np.float32))
+    kv.push("w", worker=0, grad=np.ones(2, np.float32))
+    assert kv.version("w") == 1                       # no barrier
+    kv.push("w", worker=1, grad=np.ones(2, np.float32))
+    assert kv.version("w") == 2
+
+
+def test_dist_eventual_staleness_bounded():
+    kv = KVStoreDist(n_machines=2, devices_per_machine=1,
+                     consistency="eventual", staleness=1)
+    kv.init("w", np.zeros(1, np.float32))
+    for step in range(5):
+        kv.push("w", worker=0, grad=np.ones(1, np.float32))
+    fresh = np.asarray(kv.pull("w", worker=0)).item()
+    stale = np.asarray(kv.pull("w", worker=1)).item()
+    assert fresh == 5.0
+    assert fresh - stale <= 1.0 + 1e-6               # bounded staleness
+
+
+def test_two_level_bandwidth_reduction():
+    """§3.3: level-1 aggregation => inter-machine bytes shrink by
+    devices_per_machine."""
+    n_m, dpm, steps = 4, 8, 3
+    kv = KVStoreDist(n_machines=n_m, devices_per_machine=dpm,
+                     consistency="sequential")
+    kv.init("w", np.zeros(16, np.float32))
+    for _ in range(steps):
+        for w in range(n_m * dpm):
+            kv.push("w", worker=w, grad=np.ones(16, np.float32))
+    assert kv.bytes_l1 == steps * n_m * dpm * 16 * 4
+    assert kv.bytes_l2 == steps * n_m * 16 * 4
+    assert kv.bytes_l1 // kv.bytes_l2 == dpm
+
+
+def test_dist_sequential_matches_single_worker_sgd():
+    """K synchronous workers with grad/K == one worker on the full batch."""
+    rng = np.random.RandomState(3)
+    X = rng.randn(64, 8).astype(np.float32)
+    w_true = rng.randn(8).astype(np.float32)
+    y = X @ w_true
+
+    def grad(w, Xb, yb):
+        return 2 * Xb.T @ (Xb @ w - yb) / len(yb)
+
+    # single worker
+    w1 = np.zeros(8, np.float32)
+    for _ in range(50):
+        w1 -= 0.05 * grad(w1, X, y)
+
+    # 4 synchronous workers through KVStoreDist
+    kv = KVStoreDist(n_machines=4, devices_per_machine=1,
+                     consistency="sequential")
+    kv.set_updater(lambda k, s, g: s - 0.05 * np.asarray(g))
+    kv.init("w", np.zeros(8, np.float32))
+    shards = np.split(np.arange(64), 4)
+    for _ in range(50):
+        wcur = [np.asarray(kv.pull("w", i)) for i in range(4)]
+        for i in range(4):
+            gi = grad(wcur[i], X[shards[i]], y[shards[i]]) / 4.0
+            kv.push("w", worker=i, grad=gi)
+    w4 = np.asarray(kv.pull("w", 0))
+    np.testing.assert_allclose(w4, w1, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,156 @@
+"""Memory planning (MXNet §3.1): plan validity + Fig.7-style reductions.
+
+Property tests build random symbolic DAGs; the executor's strict
+read-after-clobber checker (`check_plan=True`) validates every plan by
+executing the graph with buffer ownership tracking, and the results must be
+identical under every allocation strategy.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
+                        reset_default_engine)
+from repro.core.graph import Graph, infer_shapes
+from repro.core.memplan import naive_bytes, plan_graph
+from repro.core.symbol import Symbol
+
+
+@pytest.fixture(autouse=True)
+def fresh_engine():
+    reset_default_engine()
+
+
+def mlp_loss(depth=3, hidden=64):
+    data, label = Variable("data"), Variable("label")
+    x = data
+    for i in range(depth):
+        x = Activation(FullyConnected(x, hidden, name=f"fc{i}"), "relu")
+    return SoftmaxOutput(FullyConnected(x, 10, name="head"), label)[0]
+
+
+def mlp_args(depth=3, hidden=64, batch=32, din=32, rng=None):
+    rng = rng or np.random.RandomState(0)
+    args = {"data": rng.randn(batch, din).astype(np.float32),
+            "label": rng.randint(0, 10, (batch,)).astype(np.float32)}
+    d = din
+    for i in range(depth):
+        args[f"fc{i}_weight"] = (rng.randn(hidden, d) * 0.1).astype(np.float32)
+        args[f"fc{i}_bias"] = np.zeros(hidden, np.float32)
+        d = hidden
+    args["head_weight"] = (rng.randn(10, d) * 0.1).astype(np.float32)
+    args["head_bias"] = np.zeros(10, np.float32)
+    return args
+
+
+STRATEGIES = ("naive", "inplace", "coshare", "both")
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_plan_executes_correctly(strategy):
+    sym = mlp_loss()
+    args = mlp_args()
+    wrt = [k for k in args if k not in ("data", "label")]
+    ref = None
+    ex = sym.bind(args, grad_wrt=wrt, memplan=strategy, check_plan=True)
+    out = ex.forward()[0]
+    grads = ex.backward()
+    if ref is None:
+        ref = (out, grads)
+    # compare against naive
+    ex0 = sym.bind(args, grad_wrt=wrt, memplan="naive", check_plan=True)
+    out0 = ex0.forward()[0]
+    grads0 = ex0.backward()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out0), rtol=1e-6)
+    for k in wrt:
+        np.testing.assert_allclose(np.asarray(grads[k]), np.asarray(grads0[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+def test_reduction_ordering():
+    """naive >= inplace, coshare >= both; both gives the paper's ~2x train."""
+    sym = mlp_loss(depth=6, hidden=128)
+    shapes = {k: v.shape for k, v in mlp_args(depth=6, hidden=128).items()}
+    g = Graph(sym._outputs)
+    sh, dt = infer_shapes(g, shapes)
+    sizes = {s: plan_graph(g, sh, dt, strategy=s).internal_bytes()
+             for s in STRATEGIES}
+    assert sizes["naive"] >= sizes["inplace"] >= sizes["both"]
+    assert sizes["naive"] >= sizes["coshare"] >= sizes["both"]
+    assert sizes["naive"] / sizes["both"] >= 1.5  # forward-only already shares
+
+
+def test_prediction_shares_more_than_training():
+    """Fig. 7: prediction (forward-only) reuses much more than training."""
+    sym = mlp_loss(depth=8, hidden=256)
+    args = mlp_args(depth=8, hidden=256)
+    wrt = [k for k in args if k not in ("data", "label")]
+    ex_pred = sym.bind(args, memplan="both")
+    ex_train = sym.bind(args, grad_wrt=wrt, memplan="both")
+    red_pred = ex_pred.memory_stats()["reduction"]
+    red_train = ex_train.memory_stats()["reduction"]
+    assert red_pred > red_train >= 1.0
+    assert red_pred >= 3.0  # paper: ~4x for prediction
+
+
+# ---------------------------------------------------------------------------
+# Property-based: random elementwise DAGs execute identically under all plans
+
+@st.composite
+def random_dag_program(draw):
+    n_ops = draw(st.integers(3, 25))
+    ops = draw(st.lists(st.sampled_from(["add", "mul", "sub", "tanh", "relu",
+                                         "exp_s", "neg", "scale"]),
+                        min_size=n_ops, max_size=n_ops))
+    picks = draw(st.lists(st.tuples(st.integers(0, 10 ** 6),
+                                    st.integers(0, 10 ** 6)),
+                          min_size=n_ops, max_size=n_ops))
+    return ops, picks
+
+
+@given(random_dag_program())
+@settings(max_examples=25, deadline=None)
+def test_random_dag_all_strategies_agree(prog):
+    from repro.core import ops as _ops
+    ops_list, picks = prog
+    a, b = Variable("a"), Variable("b")
+    vals = [a, b]
+    for op, (i, j) in zip(ops_list, picks):
+        x = vals[i % len(vals)]
+        y = vals[j % len(vals)]
+        if op == "add":
+            vals.append(x + y)
+        elif op == "mul":
+            vals.append(x * y)
+        elif op == "sub":
+            vals.append(x - y)
+        elif op == "tanh":
+            vals.append(Symbol._from_op("tanh", [x]))
+        elif op == "relu":
+            vals.append(Activation(x, "relu"))
+        elif op == "exp_s":
+            vals.append(Symbol._from_op("sigmoid", [x]))
+        elif op == "neg":
+            vals.append(-x)
+        elif op == "scale":
+            vals.append(x * 0.5 + 1.0)
+    loss = Symbol._from_op("reduce_sum", [vals[-1]])
+    rng = np.random.RandomState(0)
+    args = {"a": rng.randn(3, 4).astype(np.float32),
+            "b": rng.randn(3, 4).astype(np.float32)}
+    results = {}
+    for strat in STRATEGIES:
+        reset_default_engine()
+        ex = loss.bind(args, grad_wrt=["a", "b"], memplan=strat,
+                       check_plan=True)
+        out = np.asarray(ex.forward()[0])
+        grads = {k: np.asarray(v) for k, v in ex.backward().items()}
+        results[strat] = (out, grads)
+    base = results["naive"]
+    for strat in STRATEGIES[1:]:
+        np.testing.assert_allclose(results[strat][0], base[0], rtol=1e-5,
+                                   err_msg=strat)
+        for k in ("a", "b"):
+            np.testing.assert_allclose(results[strat][1][k], base[1][k],
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"{strat}:{k}")

@@ -1,0 +1,127 @@
+"""Graph optimization (MXNet §3.1): pruning, pattern fusion, segment fusion."""
+import numpy as np
+import pytest
+
+from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
+                        reset_default_engine)
+from repro.core.graph import Graph
+from repro.core.optimize import fuse_elementwise, optimize_graph, pattern_fuse
+from repro.core.symbol import Symbol
+
+
+@pytest.fixture(autouse=True)
+def fresh_engine():
+    reset_default_engine()
+
+
+def test_prune_drops_unused_branch():
+    a = Variable("a")
+    used = a * 2.0
+    _unused = Symbol._from_op("exp", [a * 3.0])  # never an output
+    g = Graph(used._outputs)
+    ops = [n.op for n in g.nodes]
+    assert "exp" not in ops and len(ops) == 2  # var + scale
+
+
+def test_prediction_graph_smaller_than_training():
+    """Binding only the forward output skips the backward subgraph."""
+    data, label = Variable("data"), Variable("label")
+    net = SoftmaxOutput(FullyConnected(data, 8, name="fc"), label)[0]
+    args = {"data": np.zeros((4, 6), np.float32),
+            "label": np.zeros(4, np.float32),
+            "fc_weight": np.zeros((8, 6), np.float32),
+            "fc_bias": np.zeros(8, np.float32)}
+    ex_pred = net.bind(args)
+    ex_train = net.bind(args, grad_wrt=["fc_weight", "fc_bias"])
+    assert len(ex_pred.graph) < len(ex_train.graph)
+
+
+def test_pattern_fuse_axb_plus_const():
+    """Paper's example: a*b+1 becomes a single fused call."""
+    a, b = Variable("a"), Variable("b")
+    expr = a * b + 1.0
+    g = pattern_fuse(Graph(expr._outputs))
+    ops = [n.op for n in g.nodes if n.op != "var"]
+    assert ops == ["fma_const"]
+    # and it evaluates identically
+    va = np.random.RandomState(0).randn(3, 3).astype(np.float32)
+    vb = np.random.RandomState(1).randn(3, 3).astype(np.float32)
+    out = expr.eval(a=va, b=vb)[0]
+    np.testing.assert_allclose(np.asarray(out), va * vb + 1.0, rtol=1e-6)
+
+
+def test_fused_segments_reduce_op_count():
+    a, b = Variable("a"), Variable("b")
+    x = a * b
+    for _ in range(6):
+        x = Symbol._from_op("tanh", [x + 1.0])
+    loss = Symbol._from_op("reduce_sum", [x])
+    g = optimize_graph(loss._outputs)
+    segs, node2seg = fuse_elementwise(g)
+    assert len(segs) >= 1
+    biggest = max(len(s.nodes) for s in segs.values())
+    assert biggest >= 6  # the chain fused into one jitted call
+
+
+def test_optimized_equals_unoptimized():
+    rng = np.random.RandomState(0)
+    data, label = Variable("data"), Variable("label")
+    h = Activation(FullyConnected(data, 32, name="fc1"), "tanh")
+    net = SoftmaxOutput(FullyConnected(h, 5, name="fc2"), label)[0]
+    args = {"data": rng.randn(16, 8).astype(np.float32),
+            "label": rng.randint(0, 5, 16).astype(np.float32),
+            "fc1_weight": rng.randn(32, 8).astype(np.float32) * 0.2,
+            "fc1_bias": np.zeros(32, np.float32),
+            "fc2_weight": rng.randn(5, 32).astype(np.float32) * 0.2,
+            "fc2_bias": np.zeros(5, np.float32)}
+    wrt = ["fc1_weight", "fc2_weight"]
+    reset_default_engine()
+    ex1 = net.bind(args, grad_wrt=wrt, optimize=True)
+    o1, g1 = ex1.forward()[0], ex1.backward()
+    reset_default_engine()
+    ex2 = net.bind(args, grad_wrt=wrt, optimize=False)
+    o2, g2 = ex2.forward()[0], ex2.backward()
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+    for k in wrt:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_compile_whole_matches_per_op():
+    """Whole-graph jit (the Fig.6 fast path) must equal per-op execution."""
+    rng = np.random.RandomState(1)
+    data, label = Variable("data"), Variable("label")
+    h = Activation(FullyConnected(data, 16, name="fc1"), "relu")
+    net = SoftmaxOutput(FullyConnected(h, 4, name="fc2"), label)[0]
+    args = {"data": rng.randn(8, 6).astype(np.float32),
+            "label": rng.randint(0, 4, 8).astype(np.float32),
+            "fc1_weight": rng.randn(16, 6).astype(np.float32) * 0.3,
+            "fc1_bias": np.zeros(16, np.float32),
+            "fc2_weight": rng.randn(4, 16).astype(np.float32) * 0.3,
+            "fc2_bias": np.zeros(4, np.float32)}
+    wrt = ["fc1_weight", "fc2_weight", "fc1_bias", "fc2_bias"]
+    reset_default_engine()
+    ex1 = net.bind(args, grad_wrt=wrt, compile_whole=True)
+    o1 = ex1.forward()[0]
+    g1 = ex1.backward()
+    reset_default_engine()
+    ex2 = net.bind(args, grad_wrt=wrt)
+    o2 = ex2.forward()[0]
+    g2 = ex2.backward()
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+    for k in wrt:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+
+
+def test_fused_segment_multi_output():
+    """A fused node also consumed outside the segment is exported."""
+    a = Variable("a")
+    t = Symbol._from_op("tanh", [a * 2.0])
+    u = t + 1.0
+    v = t * 3.0          # t consumed twice -> stays a segment output
+    loss = Symbol._from_op("reduce_sum", [u]) + Symbol._from_op("reduce_sum", [v])
+    va = np.random.RandomState(0).randn(4).astype(np.float32)
+    out = loss.eval(a=va)[0]
+    ref = np.sum(np.tanh(va * 2) + 1) + np.sum(np.tanh(va * 2) * 3)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)

@@ -1,0 +1,86 @@
+"""Symbol API (MXNet §2.1): composition, shape inference, save/load, eval."""
+import numpy as np
+import pytest
+
+from repro.core import (Activation, FullyConnected, SoftmaxOutput, Symbol,
+                        Variable, chain, reset_default_engine)
+
+
+@pytest.fixture(autouse=True)
+def fresh_engine():
+    reset_default_engine()
+
+
+def make_mlp():
+    data, label = Variable("data"), Variable("label")
+    return chain(data,
+                 lambda x: FullyConnected(x, 64, name="fc1"),
+                 lambda x: Activation(x, "relu"),
+                 lambda x: FullyConnected(x, 10, name="fc2"),
+                 lambda x: SoftmaxOutput(x, label))
+
+
+def test_list_arguments_order():
+    mlp = make_mlp()
+    args = mlp.list_arguments()
+    assert args == ["data", "fc1_weight", "fc1_bias", "fc2_weight", "fc2_bias",
+                    "label"]
+
+
+def test_infer_shape():
+    mlp = make_mlp()
+    shapes = mlp.infer_shape(data=(8, 32), label=(8,), fc1_weight=(64, 32),
+                             fc1_bias=(64,), fc2_weight=(10, 64), fc2_bias=(10,))
+    assert shapes == [(), (8, 10)]  # loss scalar + probs
+
+
+def test_multi_output_select():
+    mlp = make_mlp()
+    assert len(mlp) == 2
+    probs = mlp[1]
+    assert probs.infer_shape(data=(4, 32), label=(4,), fc1_weight=(64, 32),
+                             fc1_bias=(64,), fc2_weight=(10, 64),
+                             fc2_bias=(10,)) == [(4, 10)]
+
+
+def test_save_load_roundtrip(tmp_path):
+    mlp = make_mlp()
+    p = tmp_path / "mlp.json"
+    mlp.save(str(p))
+    again = Symbol.load(str(p))
+    assert again.list_arguments() == mlp.list_arguments()
+    kw = dict(data=(8, 32), label=(8,), fc1_weight=(64, 32), fc1_bias=(64,),
+              fc2_weight=(10, 64), fc2_bias=(10,))
+    assert again.infer_shape(**kw) == mlp.infer_shape(**kw)
+
+
+def test_operator_sugar_eval():
+    a, b = Variable("a"), Variable("b")
+    expr = (a * b + 1.0) / 2.0 - a
+    va = np.arange(6, dtype=np.float32).reshape(2, 3)
+    vb = np.ones((2, 3), np.float32) * 3
+    out = expr.eval(a=va, b=vb)[0]
+    np.testing.assert_allclose(np.asarray(out), (va * vb + 1) / 2 - va, rtol=1e-6)
+
+
+def test_matmul_sugar():
+    a, b = Variable("a"), Variable("b")
+    va = np.random.RandomState(0).randn(3, 4).astype(np.float32)
+    vb = np.random.RandomState(1).randn(4, 5).astype(np.float32)
+    out = (a @ b).eval(a=va, b=vb)[0]
+    np.testing.assert_allclose(np.asarray(out), va @ vb, rtol=1e-5)
+
+
+def test_memory_estimate_smaller_for_prediction():
+    mlp = make_mlp()
+    kw = dict(data=(64, 32), label=(64,), fc1_weight=(64, 32), fc1_bias=(64,),
+              fc2_weight=(10, 64), fc2_bias=(10,))
+    est_both = mlp[0].memory_estimate(strategy="both", **kw)
+    est_naive = mlp[0].memory_estimate(strategy="naive", **kw)
+    assert est_both["internal_bytes"] <= est_naive["internal_bytes"]
+
+
+def test_missing_shape_raises():
+    mlp = make_mlp()
+    with pytest.raises(ValueError, match="missing shape"):
+        mlp.infer_shape(data=(8, 32))

@@ -1,0 +1,81 @@
+"""Unit tests for the dry-run/roofline tooling: the HLO collective parser
+(replica-group accounting) and the probe-composition arithmetic."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import _group_size, collective_bytes
+
+
+HLO = """
+  %ar = f32[16,512]{1,0} all-reduce(%x), replica_groups=[32,16]<=[512], to_apply=%sum
+  %ag = bf16[4,1024]{1,0} all-gather(%y), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={1}
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[2,8]<=[16], to_apply=%sum
+  %a2a = bf16[8,8]{1,0} all-to-all(%w), replica_groups=[4,4]<=[16]
+  %cp = f32[100]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %other = f32[5]{0} add(%a, %b)
+"""
+
+
+def test_group_size_iota_and_list():
+    assert _group_size("replica_groups=[32,16]<=[512]") == 16
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}, dim") == 4
+    assert _group_size("no groups here") == 1
+
+
+def test_collective_bytes_accounting():
+    out = collective_bytes(HLO)
+    # all-reduce: result 16*512*4 = 32768 B, g=16 -> 2*S*(g-1)/g
+    assert out["all-reduce"] == pytest.approx(2 * 32768 * 15 / 16)
+    # all-gather: result 4*1024*2 = 8192 B, g=4 -> S*(g-1)/g
+    assert out["all-gather"] == pytest.approx(8192 * 3 / 4)
+    # reduce-scatter: result 64*4 = 256 B, g=8 -> S*(g-1)
+    assert out["reduce-scatter"] == pytest.approx(256 * 7)
+    # all-to-all: 8*8*2 = 128 B, g=4 -> S*(g-1)/g
+    assert out["all-to-all"] == pytest.approx(128 * 3 / 4)
+    # collective-permute: S
+    assert out["collective-permute"] == pytest.approx(400)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["total"] == pytest.approx(
+        sum(out[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute")))
+
+
+def test_collective_bytes_ignores_non_collectives():
+    out = collective_bytes("%m = f32[128,128]{1,0} dot(%a, %b)")
+    assert out["total"] == 0
+
+
+def test_probe_composition():
+    """total = base + n_super*per, per = (p4-p2)/2, base = p2-2*per."""
+    from benchmarks.roofline import composed
+    rec = {"probe2": {"flops": 110.0}, "probe4": {"flops": 210.0},
+           "full": {"flops": 999.0}}
+    val, src = composed(rec, ("flops",), ns=10)
+    # per = 50, base = 10 -> 10 + 10*50 = 510
+    assert val == pytest.approx(510.0)
+    assert src == "probes"
+    # fallback to full when probes missing
+    val, src = composed({"full": {"flops": 999.0}}, ("flops",), ns=10)
+    assert val == 999.0 and "full" in src
+
+
+def test_roofline_terms_and_bottleneck():
+    from benchmarks.roofline import analyze_record
+    rec = {
+        "status": "OK", "arch": "qwen1.5-0.5b", "shape": "train_4k",
+        "n_layers": 24, "n_super": 24,
+        "params": int(4.6e8), "params_active": int(4.6e8),
+        "probe2": {"flops": 2e12, "bytes_accessed": 2e11,
+                   "collectives": {"total": 2e10}},
+        "probe4": {"flops": 4e12, "bytes_accessed": 4e11,
+                   "collectives": {"total": 4e10}},
+        "full": {"flops": 1, "bytes_accessed": 1,
+                 "collectives": {"total": 1},
+                 "memory": {"peak_per_device": 2**30}},
+    }
+    r = analyze_record(rec)
+    # per-super: 1e12 flops -> total 24e12 -> compute = 24e12/197e12
+    assert r["t_compute_s"] == pytest.approx(24e12 / 197e12)
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+    assert r["peak_gib_per_dev"] == pytest.approx(1.0)
+    assert 0 < r["useful_ratio"] < 10

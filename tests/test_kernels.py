@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps for each kernel plus hypothesis property tests for the
+fused-update (the KVStore updater big-op).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_update import sgd_momentum
+from repro.kernels.rmsnorm import rmsnorm
+
+KEY = jax.random.PRNGKey(3)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+ATTN_SHAPES = [
+    # B, Sq, Sk, H, K, hd
+    (2, 128, 128, 4, 2, 64),
+    (1, 256, 256, 8, 8, 64),     # MHA
+    (2, 64, 64, 4, 1, 128),      # MQA
+    (1, 200, 200, 4, 2, 64),     # non-multiple of block
+    (2, 8, 8, 2, 2, 32),         # tiny
+    (1, 384, 384, 2, 2, 256),    # gemma head_dim
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(shape, dtype):
+    B, Sq, Sk, H, K, hd = shape
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    B, S, H, K, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=32,
+                          block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    B, S, H, K, hd = 2, 96, 4, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * 3
+    k = jax.random.normal(ks[1], (B, S, K, hd)) * 3
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=True, softcap=30.0, block_q=32,
+                          block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Sq=1 with a long kv and q_offset (serving path)."""
+    B, Sk, H, K, hd = 2, 300, 8, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, K, hd))
+    v = jax.random.normal(ks[2], (B, Sk, K, hd))
+    out = flash_attention(q, k, v, causal=True, q_offset=Sk - 1,
+                          block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=Sk - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_kv_len_masking():
+    """Padded cache: keys beyond kv_len are invisible."""
+    B, S, H, K, hd = 1, 64, 2, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=False, kv_len=40, block_q=32,
+                          block_k=32)
+    want = ref.flash_attention_ref(q[:, :, :, :], k[:, :40], v[:, :40],
+                                   causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (1, 2048),
+                                   (17, 300), (128, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_shapes_dtypes(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = (jax.random.normal(ks[1], shape[-1:]) * 0.1).astype(dtype)
+    out = rmsnorm(x, w, block_rows=8)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused SGD-momentum update (the KVStore updater)
+
+@pytest.mark.parametrize("shape", [(100,), (33, 7), (2, 3, 5, 8), (4096,)])
+@pytest.mark.parametrize("pdtype", [jnp.float32, jnp.bfloat16])
+def test_fused_update_shapes(shape, pdtype):
+    ks = jax.random.split(KEY, 3)
+    p = jax.random.normal(ks[0], shape, pdtype)
+    g = jax.random.normal(ks[1], shape, pdtype)
+    m = jax.random.normal(ks[2], shape, jnp.float32)
+    new_p, new_m = sgd_momentum(p, g, m, lr=0.1, mu=0.9, weight_decay=0.01,
+                                block=64)
+    want_p, want_m = ref.sgd_momentum_ref(p, g, m, lr=0.1, mu=0.9,
+                                          weight_decay=0.01)
+    np.testing.assert_allclose(np.asarray(new_m), np.asarray(want_m),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(new_p, np.float32),
+                               np.asarray(want_p, np.float32), **tol(pdtype))
+
+
+@given(st.integers(1, 500), st.floats(1e-4, 0.5), st.floats(0.0, 0.99),
+       st.floats(0.0, 0.1))
+@settings(max_examples=20, deadline=None)
+def test_fused_update_property(n, lr, mu, wd):
+    """Hypothesis sweep over sizes and hyperparameters."""
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    p = jax.random.normal(ks[0], (n,))
+    g = jax.random.normal(ks[1], (n,))
+    m = jax.random.normal(ks[2], (n,))
+    new_p, new_m = sgd_momentum(p, g, m, lr=lr, mu=mu, weight_decay=wd,
+                                block=128)
+    want_p, want_m = ref.sgd_momentum_ref(p, g, m, lr=lr, mu=mu,
+                                          weight_decay=wd)
+    np.testing.assert_allclose(np.asarray(new_p), np.asarray(want_p),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_m), np.asarray(want_m),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_update_is_idempotent_free_and_stateful():
+    """Repeated updates track the reference trajectory (momentum state)."""
+    p = jnp.ones((64,), jnp.float32)
+    g = jnp.full((64,), 0.5)
+    m = jnp.zeros((64,), jnp.float32)
+    pr, mr = p, m
+    for _ in range(5):
+        p, m = sgd_momentum(p, g, m, lr=0.1, mu=0.9, weight_decay=0.0,
+                            block=64)
+        pr, mr = ref.sgd_momentum_ref(pr, g, mr, lr=0.1, mu=0.9,
+                                      weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(pr), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model integration: Pallas attention == jnp attention inside a real model
+
+def test_model_with_pallas_attention_matches():
+    from repro.configs import get_config
+    from repro.models import get_model, reduced
+    from repro.models import layers as L
+    m = get_model(reduced(get_config("qwen1.5-0.5b")))
+    params = m.init(KEY)
+    batch = m.make_batch(KEY, "train", 1, 64)
+    loss0, _ = m.loss(params, batch)
+    L.set_use_pallas(True)
+    try:
+        loss1, _ = m.loss(params, batch)
+    finally:
+        L.set_use_pallas(False)
+    np.testing.assert_allclose(float(loss0), float(loss1), rtol=1e-4)

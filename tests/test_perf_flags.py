@@ -1,0 +1,61 @@
+"""Perf-variant flags must preserve numerics (the §Perf hillclimb
+optimizations are only admissible if bit-compatible within tolerance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import perf_flags
+from repro.configs import get_config
+from repro.models import get_model, reduced
+from repro.models.layers import gqa_attention
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(autouse=True)
+def clean_flags():
+    perf_flags.reset_flags()
+    yield
+    perf_flags.reset_flags()
+
+
+def test_window_slice_matches_baseline():
+    B, S, H, K, hd, W = 1, 4096, 4, 2, 32, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    base = gqa_attention(q, k, v, causal=True, window=W)
+    perf_flags.set_flags(window_slice=True)
+    fast = gqa_attention(q, k, v, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(base),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ce_chunks_invariant():
+    cfg = reduced(get_config("qwen1.5-0.5b"), vocab=128)
+    m = get_model(cfg)
+    params = m.init(KEY)
+    batch = m.make_batch(KEY, "train", 2, 33)
+    l16, _ = m.loss(params, batch)
+    perf_flags.set_flags(ce_chunks=4)
+    l4, _ = m.loss(params, batch)
+    perf_flags.set_flags(ce_chunks=1)
+    l1, _ = m.loss(params, batch)
+    np.testing.assert_allclose(float(l16), float(l4), rtol=1e-5)
+    np.testing.assert_allclose(float(l16), float(l1), rtol=1e-5)
+
+
+def test_attn_q_chunk_invariant():
+    B, S, H, K, hd = 1, 2048, 2, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    perf_flags.set_flags(attn_q_chunk=4096)   # single block
+    one = gqa_attention(q, k, v, causal=True)
+    perf_flags.set_flags(attn_q_chunk=256)    # 8 chunks
+    many = gqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(many), np.asarray(one),
+                               rtol=1e-5, atol=1e-6)
