@@ -1,0 +1,107 @@
+"""Flat vs hierarchical ``gradient_sync`` on a 2x4x2 host mesh (§3.3
+on-mesh): wall time per sync and cross-pod all-reduce bytes from the
+compiled HLO.
+
+Multi-device lowering needs --xla_force_host_platform_device_count set
+before jax initializes, so the measurement runs in a subprocess and
+reports one CSV row per (mode, metric).
+
+CSV: name,value,derived
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# 8 workers x 1 MiB gradient on a 2 pods x 4 data x 2 model mesh
+N_ELEMS = 262_144
+STEPS = 20
+
+_BODY = f"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=16'
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.collectives import gradient_sync
+from repro.launch.dryrun import collective_bytes
+
+mesh = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
+W = 8
+rng = np.random.RandomState(0)
+g = {{"w": jnp.asarray(rng.randn(W, {N_ELEMS}), jnp.float32)}}
+
+with jax.set_mesh(mesh):
+    for mode in ("flat", "hierarchical"):
+        f = jax.jit(lambda x, mode=mode: gradient_sync(mesh, x, mode=mode))
+        coll = collective_bytes(f.lower(g).compile().as_text())
+        out = f(g)                      # compile + warm
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range({STEPS}):
+            out = f(g)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / {STEPS} * 1e6
+        print(f"RESULT,{{mode}},us_per_sync,{{us:.1f}}")
+        print(f"RESULT,{{mode}},crosspod_allreduce_bytes,"
+              f"{{coll['raw']['all-reduce']}}")
+        print(f"RESULT,{{mode}},total_collective_bytes,"
+              f"{{coll['raw_total']}}")
+"""
+
+
+def _measure() -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _BODY], capture_output=True,
+                       text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_dist subprocess failed:\n{r.stderr[-2000:]}")
+    out = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, mode, metric, value = line.split(",")
+            out[(mode, metric)] = float(value)
+    return out
+
+
+def run(csv: bool = True):
+    vals = _measure()
+    rows = []
+    for (mode, metric), value in sorted(vals.items()):
+        derived = ""
+        if metric == "crosspod_allreduce_bytes" and mode == "hierarchical":
+            flat = vals[("flat", metric)]
+            derived = f"{flat / max(value, 1):.1f}x fewer than flat"
+        rows.append((f"gradient_sync_{mode}_{metric}", value, derived))
+        if csv:
+            print(f"{rows[-1][0]},{value},{derived}")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    """The §3.3 claim on-mesh: the hierarchical schedule's cross-pod
+    all-reduce moves fewer bytes than flat (factor = |data| = 4)."""
+    d = {name: value for name, value, _ in rows}
+    failures = []
+    flat = d.get("gradient_sync_flat_crosspod_allreduce_bytes", 0)
+    hier = d.get("gradient_sync_hierarchical_crosspod_allreduce_bytes", 0)
+    if not flat or not hier:
+        failures.append("missing gradient_sync byte measurements")
+    elif hier >= flat:
+        failures.append(
+            f"hierarchical all-reduce bytes {hier} >= flat {flat}")
+    elif flat / hier < 2.0:
+        failures.append(
+            f"hierarchical reduction factor {flat / hier:.2f} < 2.0")
+    return failures
+
+
+if __name__ == "__main__":
+    rows = run()
+    bad = validate(rows)
+    print("PASS" if not bad else bad)
+    sys.exit(1 if bad else 0)

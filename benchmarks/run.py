@@ -12,8 +12,8 @@ import sys
 def main() -> None:
     failures = {}
 
-    from benchmarks import (bench_engine, bench_kernels, bench_memory,
-                            bench_raw_perf, bench_scalability)
+    from benchmarks import (bench_dist, bench_engine, bench_kernels,
+                            bench_memory, bench_raw_perf, bench_scalability)
 
     print("## Fig.6 raw performance (executor vs hand-jit vs eager)")
     rows = bench_raw_perf.run()
@@ -26,6 +26,10 @@ def main() -> None:
     print("\n## Fig.8 distributed scalability (two-level KVStore)")
     rows, curves = bench_scalability.run()
     failures["fig8"] = bench_scalability.validate(rows, curves)
+
+    print("\n## §3.3 on-mesh gradient sync (flat vs hierarchical, 2x4x2)")
+    rows = bench_dist.run()
+    failures["dist"] = bench_dist.validate(rows)
 
     print("\n## Dependency engine")
     rows = bench_engine.run()

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -42,6 +43,10 @@ class Tag:
         return f"<Tag {self.name}>"
 
 
+def _DONE():  # pragma: no cover - replaced fn of an executed op
+    raise AssertionError("op already executed")
+
+
 @dataclass
 class _Op:
     seq: int
@@ -51,7 +56,9 @@ class _Op:
     name: str
     n_deps: int = 0
     dependents: list = field(default_factory=list)
+    deps: list = field(default_factory=list)   # predecessor ops (for wait)
     done: bool = False
+    claimed: bool = False                      # taken by an executor/waiter
 
 
 class Engine:
@@ -92,6 +99,7 @@ class Engine:
                 dep_op = self._pending.get(d)
                 if dep_op is not None and not dep_op.done:
                     dep_op.dependents.append(op)
+                    op.deps.append(dep_op)
                     op.n_deps += 1
 
             # update tag state
@@ -107,9 +115,29 @@ class Engine:
             return op
 
     # -- execution ------------------------------------------------------------
+    def _finish(self, op: _Op):
+        with self._lock:
+            op.done = True
+            self.ops_executed += 1
+            self._pending.pop(op.seq, None)
+            for dep in op.dependents:
+                dep.n_deps -= 1
+                if dep.n_deps == 0:
+                    self._ready.append(dep)
+            # drop the graph edges (and the closure) so a long-flushed
+            # chain does not stay reachable through _last_writer
+            op.deps.clear()
+            op.dependents.clear()
+            op.fn = _DONE
+
     def _run_wave(self) -> int:
         with self._lock:
-            wave = list(self._ready)
+            # ops executed out-of-wave by a fine-grained wait() may still
+            # sit in the ready queue; drop them (and ops another executor
+            # has already claimed)
+            wave = [op for op in self._ready if not op.done and not op.claimed]
+            for op in wave:
+                op.claimed = True
             self._ready.clear()
         if not wave:
             return 0
@@ -117,26 +145,64 @@ class Engine:
             self.wave_sizes.append(len(wave))
         for op in wave:  # independent by construction
             op.fn()
-            with self._lock:
-                op.done = True
-                self.ops_executed += 1
-                del self._pending[op.seq]
-                for dep in op.dependents:
-                    dep.n_deps -= 1
-                    if dep.n_deps == 0:
-                        self._ready.append(dep)
+            self._finish(op)
         return len(wave)
 
     def wait_all(self):
-        while self._run_wave():
-            pass
-        assert not self._pending, f"deadlock: {list(self._pending.values())[:5]}"
+        while True:
+            if self._run_wave():
+                continue
+            with self._lock:
+                if not self._pending:
+                    return
+                busy = any(op.claimed and not op.done
+                           for op in self._pending.values())
+                assert busy, \
+                    f"deadlock: {list(self._pending.values())[:5]}"
+            time.sleep(0)  # an op is mid-execution on another thread
 
     def wait(self, tag: Tag):
-        """Flush everything needed to make `tag`'s value final."""
-        # conservative single-queue flush (correct; fine-grained would track
-        # the tag's ancestor closure)
-        self.wait_all()
+        """Flush exactly the ops `tag`'s final value depends on.
+
+        The closure of the tag's last writer over dependency edges (RAW,
+        WAW and WAR — a pre-mutation reader is a real predecessor of the
+        mutator, so ordering is preserved).  Independent pending ops are
+        left untouched (§3.2: waits are per-resource, not global barriers).
+        """
+        with self._lock:
+            writer = self._last_writer[tag.tid]
+            if writer is None or writer.done:
+                return
+            closure = []
+            foreign = []
+            stack = [writer]
+            seen = set()
+            while stack:
+                op = stack.pop()
+                if op.seq in seen or op.done:
+                    continue
+                seen.add(op.seq)
+                if op.claimed:          # mid-execution on another thread
+                    foreign.append(op)
+                    continue
+                op.claimed = True
+                closure.append(op)
+                stack.extend(op.deps)
+        if foreign:
+            # an ancestor is mid-execution on another thread: release our
+            # claims, let it (and any ready work) finish, then re-resolve —
+            # the closure may have shrunk or completed in the meantime
+            with self._lock:
+                for op in closure:
+                    op.claimed = False
+            while any(not op.done for op in foreign):
+                if not self._run_wave():
+                    time.sleep(0)
+            return self.wait(tag)
+        # push order is a topological order (deps always have smaller seq)
+        for op in sorted(closure, key=lambda o: o.seq):
+            op.fn()
+            self._finish(op)
 
     # -- introspection ----------------------------------------------------------
     def stats(self) -> dict:

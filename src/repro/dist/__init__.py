@@ -1,0 +1,25 @@
+"""repro.dist — sharding annotations, partition rules, on-mesh collectives.
+
+The distribution layer of the reproduction (DESIGN.md §5):
+
+* ``annotate`` — per-tensor sharding constraints over a named mesh with a
+  graceful no-mesh/1-device fallback (model code is annotation-transparent
+  on CPU);
+* ``partition`` — PartitionSpec rule tables for params / batches / caches
+  covering every config in ``repro/configs``;
+* ``collectives`` — ``gradient_sync``: flat vs the paper's §3.3 two-level
+  (hierarchical) gradient all-reduce over a ``(pod, data, model)`` mesh;
+* ``compat`` — backfills ``jax.set_mesh`` / ``jax.shard_map`` on older jax
+  (imported first, for its side effects).
+"""
+from . import compat  # noqa: F401  (installs jax API backfills)
+from .annotate import BATCH, DATA_AXES, ann, ann_first_fit, _mesh_axes
+from .collectives import gradient_sync, worker_axes
+from .partition import (batch_pspecs, cache_pspecs, make_shardings,
+                        param_pspecs)
+
+__all__ = [
+    "BATCH", "DATA_AXES", "ann", "ann_first_fit", "_mesh_axes",
+    "gradient_sync", "worker_axes",
+    "param_pspecs", "batch_pspecs", "cache_pspecs", "make_shardings",
+]

@@ -1,0 +1,137 @@
+"""Per-tensor sharding annotations over a named mesh.
+
+This is the graph-level placement surface of the dist layer (the analogue
+of TensorFlow's device annotations, and of GSPMD sharding constraints in
+jax): model code states *where a tensor's dims live* — ``ann(x, BATCH,
+"model", None)`` — and the partitioner materialises the collectives.
+
+Three properties make the API usable across every config in
+``repro/configs`` and on dev boxes:
+
+* **no-mesh / 1-device fallback** — without an ambient multi-device mesh
+  every annotation is the identity, so CPU smoke tests run the exact same
+  model code;
+* **BATCH sentinel** — "the data-parallel axes of whatever mesh is
+  active": ``("pod", "data")`` on the multi-pod production mesh,
+  ``("data",)`` on a single pod;
+* **divisibility dropping** — an axis that does not divide the annotated
+  dim is dropped (largest dividing subset wins), e.g. 8 KV heads on a
+  16-way "model" axis degrade to replicated instead of erroring, which is
+  what lets one rule table cover dense/MoE/SSM/enc-dec configs.
+
+``ann_first_fit`` tries several full specs in priority order and applies
+the first that divides *exactly* (used where two layouts are both natural,
+e.g. SSD's heads-sharded vs chunk-sharded score tensors).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .compat import current_mesh
+
+
+class _Batch:
+    """Sentinel dim entry: shard over all data-parallel mesh axes."""
+
+    def __repr__(self):
+        return "BATCH"
+
+
+BATCH = _Batch()
+
+# mesh axes that carry data parallelism, outermost first (the mesh may
+# have any subset of these; "model" is tensor/sequence parallelism)
+DATA_AXES = ("pod", "data")
+
+
+def _mesh_axes():
+    """``(axis_names, {axis: size})`` of the ambient mesh; ``((), {})``
+    when no mesh is installed (the CPU fallback)."""
+    m = current_mesh()
+    if m is None:
+        return (), {}
+    return tuple(m.axis_names), dict(m.shape)
+
+
+def _product(axes, sizes):
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def _entry_axes(entry, axis_names):
+    """Mesh axes requested by one spec entry (restricted to the mesh)."""
+    if entry is None:
+        return ()
+    if isinstance(entry, _Batch):
+        return tuple(a for a in DATA_AXES if a in axis_names)
+    if isinstance(entry, str):
+        return (entry,) if entry in axis_names else ()
+    return tuple(a for a in entry if a in axis_names)
+
+
+def _best_fit(axes, dim, sizes):
+    """Largest-factor subset of ``axes`` whose size product divides ``dim``
+    (order preserved); ``()`` when nothing divides."""
+    best, best_n = (), 1
+    for r in range(1, len(axes) + 1):
+        for combo in itertools.combinations(axes, r):
+            n = _product(combo, sizes)
+            if n > best_n and dim % n == 0:
+                best, best_n = combo, n
+    return best
+
+
+def _resolve(spec, shape, axis_names, sizes, strict=False):
+    """Turn a spec of ``None | BATCH | axis | (axes...)`` entries into a
+    PartitionSpec that divides ``shape``.  Non-dividing axes are dropped
+    (best-fit) unless ``strict``, in which case ``None`` is returned."""
+    assert len(spec) == len(shape), (spec, shape)
+    out = []
+    for entry, dim in zip(spec, shape):
+        axes = _entry_axes(entry, axis_names)
+        if not axes:
+            out.append(None)
+            continue
+        if dim % _product(axes, sizes) == 0:
+            out.append(axes[0] if len(axes) == 1 else axes)
+            continue
+        if strict:
+            return None
+        fit = _best_fit(axes, dim, sizes)
+        out.append(None if not fit else (fit[0] if len(fit) == 1 else fit))
+    return P(*out)
+
+
+def ann(x, *spec):
+    """Constrain ``x``'s layout on the ambient mesh; identity without one.
+
+    One entry per dim: ``BATCH`` (data axes), an axis name, a tuple of
+    axis names, or ``None`` (replicated / partitioner's choice is pinned
+    to replicated — ``ann`` is a *constraint*, so ``None`` entries mean
+    "explicitly not sharded here").
+    """
+    m = current_mesh()
+    if m is None or m.size == 1:
+        return x
+    p = _resolve(spec, x.shape, tuple(m.axis_names), dict(m.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, p))
+
+
+def ann_first_fit(x, *specs):
+    """Apply the first spec that divides ``x`` exactly; if none does, the
+    last spec is applied with best-effort axis dropping."""
+    m = current_mesh()
+    if m is None or m.size == 1:
+        return x
+    names, sizes = tuple(m.axis_names), dict(m.shape)
+    for spec in specs[:-1]:
+        p = _resolve(spec, x.shape, names, sizes, strict=True)
+        if p is not None:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(m, p))
+    p = _resolve(specs[-1], x.shape, names, sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, p))

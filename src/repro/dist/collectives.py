@@ -1,0 +1,104 @@
+"""Hierarchical on-mesh gradient synchronization (MXNet §3.3).
+
+The paper's two-level KVStore aggregates gradients *within* a machine
+first (level-1), then *across* machines (level-2), shrinking inter-machine
+traffic by the devices-per-machine factor.  ``core/kvstore.py`` models
+this analytically; this module is the on-mesh counterpart over a
+``(pod, data, model)`` TPU mesh, where "machine" = pod and
+"device-per-machine" = the ``data`` axis:
+
+* ``mode="flat"`` — one all-reduce over the combined worker axes: every
+  worker's full gradient crosses the pod boundary;
+* ``mode="hierarchical"`` — reduce-scatter within each pod's ``data``
+  axis (level-1: after it each worker holds a 1/|data| summed shard),
+  an all-reduce of only that shard across ``pod`` (level-2), and an
+  all-gather within ``data`` to restore the full replica.
+
+Both modes produce identical sums; the hierarchical HLO's cross-pod
+all-reduce moves 1/|data| of the bytes — the §3.3 claim, checked from the
+compiled HLO by ``tests/test_dist.py`` and benchmarked by
+``benchmarks/bench_dist.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import compat
+from .annotate import DATA_AXES
+
+MODES = ("flat", "hierarchical")
+
+
+def worker_axes(mesh):
+    """The mesh axes whose product is the gradient-worker count."""
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _flat_body(waxes):
+    def sync(g):
+        return jax.lax.psum(jnp.squeeze(g, 0), waxes)
+    return sync
+
+
+def _hier_body(n_data):
+    def sync(g):
+        g = jnp.squeeze(g, 0)
+        shape, size = g.shape, g.size
+        flat = g.reshape(-1)
+        pad = (-size) % n_data
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        # level-1 reduce-scatter within the pod, spelled as all-to-all +
+        # local sum (XLA backends without native reduce-scatter decompose
+        # psum_scatter into a FULL-size all-reduce, which would defeat the
+        # schedule); after this each data rank holds a 1/|data| summed shard
+        chunks = flat.reshape(n_data, -1)
+        received = jax.lax.all_to_all(chunks, "data", split_axis=0,
+                                      concat_axis=0, tiled=False)
+        shard = received.sum(0)
+        # level-2: only the 1/|data| shard crosses the pod boundary
+        shard = jax.lax.psum(shard, "pod")
+        gathered = jax.lax.all_gather(shard, "data", axis=0)  # (n_data, c)
+        full = gathered.reshape(-1)
+        if pad:
+            full = full[:size]
+        return full.reshape(shape)
+    return sync
+
+
+def gradient_sync(mesh, grads, mode: str = "flat"):
+    """Sum a pytree of per-worker gradients over their leading worker dim.
+
+    Every leaf of ``grads`` has shape ``(W, ...)`` with ``W`` the product
+    of the mesh's worker axes (``pod`` × ``data``); the result is the
+    leading-dim sum, replicated over the mesh.  ``mode="hierarchical"``
+    falls back to flat when the mesh has no ``pod`` axis or no multi-way
+    ``data`` axis (the two schedules coincide there).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    waxes = worker_axes(mesh)
+    sizes = dict(mesh.shape)
+    n_workers = 1
+    for a in waxes:
+        n_workers *= sizes[a]
+    if not waxes or n_workers == 1 or mesh.size == 1:
+        return jax.tree.map(lambda g: g.sum(0), grads)
+    for g in jax.tree.leaves(grads):
+        if g.shape[0] != n_workers:
+            raise ValueError(
+                f"gradient leaf has leading dim {g.shape[0]}, expected the "
+                f"worker count {n_workers} (= product of mesh axes {waxes})")
+    if (mode == "hierarchical" and "pod" in mesh.axis_names
+            and sizes.get("data", 1) > 1):
+        body = _hier_body(sizes["data"])
+    else:
+        # single-pod or no intra-pod data axis: the two schedules coincide
+        body = _flat_body(waxes)
+    # all axes manual (inputs have no "model" dim; full-manual also works
+    # eagerly, where partial-auto does not on older jax)
+    sync = compat.shard_map(lambda t: jax.tree.map(body, t), mesh,
+                            in_specs=(P(waxes),), out_specs=P())
+    return sync(grads)

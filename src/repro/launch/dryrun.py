@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# default to the 512-chip dry-run topology, preserving any other XLA flags
+# the caller set — but never clobber an explicit device count (tests and
+# benches import this module for its parsers after setting up smaller meshes)
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run (deliverable e).
 
@@ -148,6 +155,23 @@ def _step_and_specs(cfg, shape_name, mesh):
     return step, args, in_sh, out_sh, donate
 
 
+class _CompiledCompat:
+    """Delegating wrapper normalizing ``cost_analysis()`` to the modern
+    dict form (older jax returns a one-dict-per-program list)."""
+
+    def __init__(self, compiled):
+        self._compiled = compiled
+
+    def __getattr__(self, name):
+        return getattr(self._compiled, name)
+
+    def cost_analysis(self):
+        ca = self._compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return ca or {}
+
+
 def lower_and_compile(cfg, shape_name, mesh):
     step, args, in_sh, out_sh, donate = _step_and_specs(cfg, shape_name, mesh)
     t0 = time.time()
@@ -157,7 +181,7 @@ def lower_and_compile(cfg, shape_name, mesh):
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()
-        compiled = lowered.compile()
+        compiled = _CompiledCompat(lowered.compile())
         t_compile = time.time() - t0
     return lowered, compiled, t_lower, t_compile
 

@@ -1,0 +1,24 @@
+"""Shared harness: run a jax test body in a subprocess with a forced host
+device count (--xla_force_host_platform_device_count must be set before
+jax initializes, so multi-device tests cannot run in the pytest process).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_sub(body: str, devices: int = 16) -> str:
+    code = ("import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(body))
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)  # a stray outer value would defeat `devices`
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout

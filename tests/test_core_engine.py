@@ -14,6 +14,33 @@ def test_lazy_then_flush():
     np.testing.assert_allclose(c.asnumpy(), np.full((2, 2), 6.0))
 
 
+def test_wait_is_fine_grained():
+    """wait(tag) flushes only the tag's ancestor closure — an independent
+    pending op must NOT be executed (§3.2 per-resource waits)."""
+    eng = Engine()
+    a = NDArray(np.ones(4, np.float32), engine=eng)
+    b = (a + 1.0) * 2.0                    # dependent chain: 2 ops
+    c = NDArray(np.ones(4, np.float32), engine=eng)
+    d = c + 5.0                            # independent pending op
+    np.testing.assert_allclose(b.asnumpy(), np.full(4, 4.0))
+    assert d._value is None                # untouched by b's flush
+    assert eng.stats()["ops"] == 2
+    np.testing.assert_allclose(d.asnumpy(), np.full(4, 6.0))
+    assert eng.stats()["ops"] == 3
+
+
+def test_wait_flushes_war_predecessors():
+    """A pre-mutation reader is an ancestor of the mutator: waiting on the
+    mutated tag must run the reader first (WAR edge preserved)."""
+    eng = Engine()
+    w = NDArray(np.zeros(3, np.float32), engine=eng)
+    r = w + 1.0                            # reads pre-mutation value
+    w += 7.0
+    np.testing.assert_allclose(w.asnumpy(), np.full(3, 7.0))
+    assert r._value is not None            # reader ran as part of the closure
+    np.testing.assert_allclose(np.asarray(r._value), np.full(3, 1.0))
+
+
 def test_mutation_war_ordering():
     """A reader pushed before a mutation must see the pre-mutation value."""
     eng = Engine()

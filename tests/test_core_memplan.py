@@ -7,7 +7,8 @@ identical under every allocation strategy.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
                         reset_default_engine)

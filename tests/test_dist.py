@@ -4,28 +4,9 @@ Multi-device behaviour needs --xla_force_host_platform_device_count, which
 must be set before jax initializes — these tests run their bodies in a
 subprocess.
 """
-import json
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
 import pytest
 
-SRC = str(Path(__file__).resolve().parents[1] / "src")
-
-
-def run_sub(body: str, devices: int = 16) -> str:
-    code = ("import os\n"
-            f"os.environ['XLA_FLAGS'] = "
-            f"'--xla_force_host_platform_device_count={devices}'\n"
-            + textwrap.dedent(body))
-    env = dict(os.environ, PYTHONPATH=SRC)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=560)
-    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
-    return r.stdout
+from mesh_subproc import run_sub
 
 
 def test_hierarchical_allreduce_matches_flat():
