@@ -1,15 +1,29 @@
-"""Flat vs hierarchical ``gradient_sync`` on a 2x4x2 host mesh (§3.3
-on-mesh): wall time per sync and cross-pod all-reduce bytes from the
-compiled HLO.
+"""Flat vs hierarchical vs bucketed ``gradient_sync`` on a 2x4x2 host mesh
+(§3.3 on-mesh + DESIGN.md §7): wall time per sync plus cross-pod all-reduce
+bytes from the compiled HLO.
+
+Bucketed mode additionally reports *per-bucket* cross-pod bytes (each
+bucket lowered through the hierarchical schedule on its own) and
+cross-validates them two ways:
+
+* their sum must equal the monolithic ``hierarchical`` cross-pod total
+  (no bytes appear or vanish when the sync is split for overlap);
+* the analytic two-level KVStore counters, with one key per bucket, must
+  attribute the same per-bucket traffic shares (``bytes_l2_by_key``) and
+  keep the §3.3 level-1/level-2 ratio per key.
 
 Multi-device lowering needs --xla_force_host_platform_device_count set
 before jax initializes, so the measurement runs in a subprocess and
 reports one CSV row per (mode, metric).
 
+Usage:  PYTHONPATH=src python benchmarks/bench_dist.py [--mode MODE]
+        MODE in {flat, hier, bucketed, all} (default all)
+
 CSV: name,value,derived
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -17,26 +31,35 @@ from pathlib import Path
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
-# 8 workers x 1 MiB gradient on a 2 pods x 4 data x 2 model mesh
-N_ELEMS = 262_144
+# 8 workers x 1 MiB gradient (8 leaves x 128 KiB) on a 2 pods x 4 data x
+# 2 model mesh; 256 KiB buckets -> 4 buckets of 2 leaves each
+N_LEAVES = 8
+LEAF_ELEMS = 32_768
+N_ELEMS = N_LEAVES * LEAF_ELEMS          # 262144 floats = 1 MiB
+BUCKET_BYTES = 256 * 1024
 STEPS = 20
+N_MACHINES, DEVS_PER_MACHINE = 2, 4      # = mesh (pod, data)
 
 _BODY = f"""
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=16'
 import time
 import jax, jax.numpy as jnp, numpy as np
+from repro.dist.bucketing import BucketPlan
 from repro.dist.collectives import gradient_sync
 from repro.launch.dryrun import collective_bytes
 
+MODES = os.environ['BENCH_DIST_MODES'].split(',')
 mesh = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
 W = 8
 rng = np.random.RandomState(0)
-g = {{"w": jnp.asarray(rng.randn(W, {N_ELEMS}), jnp.float32)}}
+g = {{f"w{{i}}": jnp.asarray(rng.randn(W, {LEAF_ELEMS}), jnp.float32)
+     for i in range({N_LEAVES})}}
 
 with jax.set_mesh(mesh):
-    for mode in ("flat", "hierarchical"):
-        f = jax.jit(lambda x, mode=mode: gradient_sync(mesh, x, mode=mode))
+    for mode in MODES:
+        f = jax.jit(lambda x, mode=mode: gradient_sync(
+            mesh, x, mode=mode, bucket_bytes={BUCKET_BYTES}))
         coll = collective_bytes(f.lower(g).compile().as_text())
         out = f(g)                      # compile + warm
         jax.block_until_ready(out)
@@ -50,11 +73,36 @@ with jax.set_mesh(mesh):
               f"{{coll['raw']['all-reduce']}}")
         print(f"RESULT,{{mode}},total_collective_bytes,"
               f"{{coll['raw_total']}}")
+    if "bucketed" in MODES:
+        # per-bucket attribution: lower each bucket's buffer through the
+        # hierarchical schedule on its own and read its cross-pod bytes
+        leaves, _ = jax.tree.flatten(g)
+        plan = BucketPlan.build(leaves, cap_bytes={BUCKET_BYTES},
+                                lead_dims=1)
+        buffers = plan.pack(leaves, lead_dims=1)
+        print(f"RESULT,bucketed,n_buckets,{{plan.n_buckets}}")
+        for i, (bucket, buf) in enumerate(zip(plan.buckets, buffers)):
+            txt = jax.jit(lambda x: gradient_sync(
+                mesh, [x], mode="hierarchical")).lower(buf).compile().as_text()
+            coll = collective_bytes(txt)
+            print(f"RESULT,bucketed,bucket{{i}}_crosspod_bytes,"
+                  f"{{coll['raw']['all-reduce']}}")
+            print(f"RESULT,bucketed,bucket{{i}}_payload_bytes,"
+                  f"{{bucket.nbytes}}")
 """
 
+_MODE_SETS = {
+    "flat": ["flat"],
+    "hier": ["hierarchical"],
+    # bucketed needs the monolithic hierarchical total as its reference
+    "bucketed": ["hierarchical", "bucketed"],
+    "all": ["flat", "hierarchical", "bucketed"],
+}
 
-def _measure() -> dict:
-    env = dict(os.environ, PYTHONPATH=SRC)
+
+def _measure(mode: str = "all") -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC,
+               BENCH_DIST_MODES=",".join(_MODE_SETS[mode]))
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", _BODY], capture_output=True,
                        text=True, env=env, timeout=560)
@@ -63,45 +111,120 @@ def _measure() -> dict:
     out = {}
     for line in r.stdout.splitlines():
         if line.startswith("RESULT,"):
-            _, mode, metric, value = line.split(",")
-            out[(mode, metric)] = float(value)
+            _, m, metric, value = line.split(",")
+            out[(m, metric)] = float(value)
     return out
 
 
-def run(csv: bool = True):
-    vals = _measure()
+def _analytic_bucket_shares(vals) -> dict[int, float]:
+    """Per-bucket share of inter-machine traffic from the two-level
+    KVStore byte counters (one key per bucket) — the analytic side of the
+    bucketed cross-validation."""
+    from repro.core import KVStoreDist
+    import numpy as np
+    kv = KVStoreDist(n_machines=N_MACHINES,
+                     devices_per_machine=DEVS_PER_MACHINE,
+                     consistency="sequential")
+    n = int(vals[("bucketed", "n_buckets")])
+    for i in range(n):
+        elems = int(vals[("bucketed", f"bucket{i}_payload_bytes")]) // 4
+        kv.init(f"bucket{i}", np.zeros(elems, np.float32))
+    for w in range(N_MACHINES * DEVS_PER_MACHINE):
+        for i in range(n):
+            elems = int(vals[("bucketed", f"bucket{i}_payload_bytes")]) // 4
+            kv.push(f"bucket{i}", worker=w,
+                    grad=np.ones(elems, np.float32))
+    total = sum(kv.bytes_l2_by_key.values())
+    shares = {i: kv.bytes_l2_by_key[f"bucket{i}"] / total for i in range(n)}
+    # §3.3 two-level ratio per bucket, reported as rows so validate() can
+    # fail it structurally rather than crashing mid-benchmark
+    ratios = {i: kv.bytes_l1_by_key[f"bucket{i}"]
+              / max(kv.bytes_l2_by_key[f"bucket{i}"], 1) for i in range(n)}
+    return shares, ratios
+
+
+def run(csv: bool = True, mode: str = "all"):
+    vals = _measure(mode)
     rows = []
-    for (mode, metric), value in sorted(vals.items()):
+    for (m, metric), value in sorted(vals.items()):
         derived = ""
-        if metric == "crosspod_allreduce_bytes" and mode == "hierarchical":
-            flat = vals[("flat", metric)]
-            derived = f"{flat / max(value, 1):.1f}x fewer than flat"
-        rows.append((f"gradient_sync_{mode}_{metric}", value, derived))
+        if metric == "crosspod_allreduce_bytes" and m == "hierarchical":
+            flat = vals.get(("flat", metric))
+            if flat:
+                derived = f"{flat / max(value, 1):.1f}x fewer than flat"
+        rows.append((f"gradient_sync_{m}_{metric}", value, derived))
         if csv:
             print(f"{rows[-1][0]},{value},{derived}")
+    if ("bucketed", "n_buckets") in vals:
+        shares, ratios = _analytic_bucket_shares(vals)
+        for i, share in shares.items():
+            rows.append((f"gradient_sync_bucketed_bucket{i}_l2_share_analytic",
+                         share, "KVStore bytes_l2_by_key"))
+            if csv:
+                print(f"{rows[-1][0]},{share},{rows[-1][2]}")
+        for i, ratio in ratios.items():
+            rows.append((f"gradient_sync_bucketed_bucket{i}_l1_over_l2",
+                         ratio, "analytic two-level ratio"))
+            if csv:
+                print(f"{rows[-1][0]},{ratio},{rows[-1][2]}")
     return rows
 
 
-def validate(rows) -> list[str]:
-    """The §3.3 claim on-mesh: the hierarchical schedule's cross-pod
-    all-reduce moves fewer bytes than flat (factor = |data| = 4)."""
+def validate(rows, mode: str = "all") -> list[str]:
+    """§3.3 on-mesh: hierarchical moves fewer cross-pod bytes than flat;
+    DESIGN.md §7: the per-bucket bytes sum back to the monolithic
+    hierarchical total and match the analytic KVStore attribution.
+
+    ``mode`` declares which measurements are *required*: every sync mode
+    the run was supposed to measure must report nonzero cross-pod bytes
+    (a parser that silently reads 0 is a failure, not a pass)."""
     d = {name: value for name, value, _ in rows}
     failures = []
     flat = d.get("gradient_sync_flat_crosspod_allreduce_bytes", 0)
     hier = d.get("gradient_sync_hierarchical_crosspod_allreduce_bytes", 0)
-    if not flat or not hier:
-        failures.append("missing gradient_sync byte measurements")
-    elif hier >= flat:
-        failures.append(
-            f"hierarchical all-reduce bytes {hier} >= flat {flat}")
-    elif flat / hier < 2.0:
-        failures.append(
-            f"hierarchical reduction factor {flat / hier:.2f} < 2.0")
+    for required in _MODE_SETS[mode]:
+        if not d.get(f"gradient_sync_{required}_crosspod_allreduce_bytes", 0):
+            failures.append(
+                f"missing/zero {required} gradient_sync byte measurement")
+    if flat and hier:
+        if hier >= flat:
+            failures.append(
+                f"hierarchical all-reduce bytes {hier} >= flat {flat}")
+        elif flat / hier < 2.0:
+            failures.append(
+                f"hierarchical reduction factor {flat / hier:.2f} < 2.0")
+
+    n = int(d.get("gradient_sync_bucketed_n_buckets", 0))
+    if n:
+        if n < 2:
+            failures.append(f"expected a multi-bucket plan, got {n} buckets")
+        per_bucket = [d[f"gradient_sync_bucketed_bucket{i}_crosspod_bytes"]
+                      for i in range(n)]
+        if sum(per_bucket) != hier:
+            failures.append(
+                f"per-bucket cross-pod bytes {per_bucket} sum to "
+                f"{sum(per_bucket)}, monolithic hierarchical moved {hier}")
+        hlo_total = sum(per_bucket)
+        for i in range(n):
+            analytic = d[f"gradient_sync_bucketed_bucket{i}_l2_share_analytic"]
+            hlo_share = per_bucket[i] / hlo_total
+            if abs(analytic - hlo_share) > 1e-9:
+                failures.append(
+                    f"bucket {i}: analytic l2 share {analytic} != HLO share "
+                    f"{hlo_share}")
+            ratio = d.get(f"gradient_sync_bucketed_bucket{i}_l1_over_l2", 0)
+            if ratio != DEVS_PER_MACHINE:
+                failures.append(
+                    f"bucket {i}: analytic l1/l2 ratio {ratio} != "
+                    f"devices-per-machine {DEVS_PER_MACHINE}")
     return failures
 
 
 if __name__ == "__main__":
-    rows = run()
-    bad = validate(rows)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=sorted(_MODE_SETS), default="all")
+    args = ap.parse_args()
+    rows = run(mode=args.mode)
+    bad = validate(rows, mode=args.mode)
     print("PASS" if not bad else bad)
     sys.exit(1 if bad else 0)

@@ -57,6 +57,9 @@ class KVStoreLocal:
         self._store: dict[str, NDArray] = {}
         self._updater: Callable = lambda key, stored, pushed: stored + pushed
         self.bytes_pushed = 0
+        # per-key attribution (sums to bytes_pushed); keys may be gradient
+        # buckets, so per-bucket traffic rolls up for cross-validation
+        self.bytes_pushed_by_key: dict[str, int] = defaultdict(int)
 
     def set_updater(self, fn: Callable):
         self._updater = fn
@@ -76,8 +79,9 @@ class KVStoreLocal:
             values = [values]
         stored = self._store[key]
         read_tags = [v.tag for v in values]
-        self.bytes_pushed += sum(
-            int(np.prod(v.shape)) * 4 for v in values)
+        nb = sum(int(np.prod(v.shape)) * 4 for v in values)
+        self.bytes_pushed += nb
+        self.bytes_pushed_by_key[key] += nb
 
         def fn(stored=stored, values=values, key=key):
             agg = values[0]._value
@@ -122,6 +126,12 @@ class KVStoreDist:
         self._pending: dict[str, dict[int, list]] = defaultdict(dict)
         self.bytes_l1 = 0  # device -> level-1 server (intra-machine)
         self.bytes_l2 = 0  # level-1 -> level-2 (inter-machine)
+        # per-key attribution (each sums to its total): when keys are
+        # gradient buckets this is the per-bucket traffic the bucketed
+        # gradient_sync cross-validates against the compiled HLO
+        # (benchmarks/bench_dist.py --mode bucketed)
+        self.bytes_l1_by_key: dict[str, int] = defaultdict(int)
+        self.bytes_l2_by_key: dict[str, int] = defaultdict(int)
 
     def set_updater(self, fn: Callable):
         self._updater = fn
@@ -143,6 +153,7 @@ class KVStoreDist:
         m = worker // self.devices_per_machine
         nb = int(np.prod(g.shape)) * 4
         self.bytes_l1 += nb
+        self.bytes_l1_by_key[key] += nb
         pend = self._pending[key]
         pend.setdefault(m, [])
         pend[m].append(g)
@@ -155,6 +166,7 @@ class KVStoreDist:
                 for x in agg[1:]:
                     total = total + x
                 self.bytes_l2 += nb
+                self.bytes_l2_by_key[key] += nb
                 self._apply(key, total)
         else:
             # sequential: wait for ALL machines' full sets, then one update
@@ -168,6 +180,7 @@ class KVStoreDist:
                     for x in gs[1:]:
                         l1 = l1 + x          # level-1 aggregate
                     self.bytes_l2 += nb      # one message per machine
+                    self.bytes_l2_by_key[key] += nb
                     total = l1 if total is None else total + l1
                 self._apply(key, total)
                 self._pending[key] = {mm: v for mm, v in pend.items() if v}

@@ -1,6 +1,6 @@
 """repro.dist — sharding annotations, partition rules, on-mesh collectives.
 
-The distribution layer of the reproduction (DESIGN.md §5):
+The distribution layer of the reproduction (DESIGN.md §5, §7):
 
 * ``annotate`` — per-tensor sharding constraints over a named mesh with a
   graceful no-mesh/1-device fallback (model code is annotation-transparent
@@ -8,12 +8,35 @@ The distribution layer of the reproduction (DESIGN.md §5):
 * ``partition`` — PartitionSpec rule tables for params / batches / caches
   covering every config in ``repro/configs``;
 * ``collectives`` — ``gradient_sync``: flat vs the paper's §3.3 two-level
-  (hierarchical) gradient all-reduce over a ``(pod, data, model)`` mesh;
+  (hierarchical) gradient all-reduce over a ``(pod, data, model)`` mesh,
+  plus the bucketed overlap-friendly schedule;
+* ``bucketing`` — ``BucketPlan`` (first-fit byte-capped gradient packing)
+  and ``overlap_taps`` (the custom_vjp trick that emits each bucket's
+  sync inside the backward computation — the §4 lazy-push analogue);
 * ``compat`` — backfills ``jax.set_mesh`` / ``jax.shard_map`` on older jax
   (imported first, for its side effects).
+
+Worked example — the full surface on a dev box (1 device, so every
+annotation is the identity and collectives degrade to local sums)::
+
+    >>> import jax, jax.numpy as jnp
+    >>> x = ann(jnp.ones((8, 16)), BATCH, "model")   # no mesh: identity
+    >>> x.shape
+    (8, 16)
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> grads = {"w": jnp.ones((4, 6)), "b": jnp.ones((4, 2))}
+    >>> out = gradient_sync(mesh, grads, mode="bucketed")
+    >>> {k: v.shape for k, v in sorted(out.items())}
+    {'b': (2,), 'w': (6,)}
+    >>> plan = BucketPlan.build(jax.tree.leaves(grads), cap_bytes=1 << 20,
+    ...                         lead_dims=1)
+    >>> plan.n_buckets, plan.assignment()
+    (1, (0, 0))
 """
 from . import compat  # noqa: F401  (installs jax API backfills)
 from .annotate import BATCH, DATA_AXES, ann, ann_first_fit, _mesh_axes
+from .bucketing import (DEFAULT_BUCKET_BYTES, Bucket, BucketPlan,
+                        leaf_nbytes, overlap_taps)
 from .collectives import gradient_sync, worker_axes
 from .partition import (batch_pspecs, cache_pspecs, make_shardings,
                         param_pspecs)
@@ -21,5 +44,7 @@ from .partition import (batch_pspecs, cache_pspecs, make_shardings,
 __all__ = [
     "BATCH", "DATA_AXES", "ann", "ann_first_fit", "_mesh_axes",
     "gradient_sync", "worker_axes",
+    "Bucket", "BucketPlan", "DEFAULT_BUCKET_BYTES", "leaf_nbytes",
+    "overlap_taps",
     "param_pspecs", "batch_pspecs", "cache_pspecs", "make_shardings",
 ]

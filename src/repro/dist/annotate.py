@@ -22,6 +22,21 @@ Three properties make the API usable across every config in
 ``ann_first_fit`` tries several full specs in priority order and applies
 the first that divides *exactly* (used where two layouts are both natural,
 e.g. SSD's heads-sharded vs chunk-sharded score tensors).
+
+Worked example — the spec-resolution core, independent of any devices
+(``_resolve`` is pure; ``ann`` wraps it in a sharding constraint)::
+
+    >>> names, sizes = ("pod", "data", "model"), {"pod": 2, "data": 4,
+    ...                                           "model": 2}
+    >>> spec = _resolve((BATCH, "model", None), (32, 16, 5), names, sizes)
+    >>> spec == P(("pod", "data"), "model", None)
+    True
+    >>> # 6 KV heads on a 4-way axis: 4 does not divide 6 -> dropped
+    >>> _resolve(("data",), (6,), names, sizes) == P(None)
+    True
+    >>> # strict mode refuses instead of dropping (ann_first_fit's probe)
+    >>> _resolve(("data",), (6,), names, sizes, strict=True) is None
+    True
 """
 from __future__ import annotations
 

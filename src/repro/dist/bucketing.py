@@ -1,0 +1,212 @@
+"""Gradient bucketing: the engine's lazy-push analogue on the jit path.
+
+MXNet's §4 dependency engine overlaps communication with computation by
+pushing each layer's gradient to the KVStore as soon as its backward op
+completes, instead of waiting for the whole backward pass.  Under jit
+there is no runtime scheduler to push to — the equivalent is *structural*:
+pack gradient leaves into ~N-MB buckets and emit one collective per
+bucket inside the backward graph, so XLA's latency-hiding scheduler can
+run bucket *k*'s all-reduce while the FLOPs that produce bucket *k+1*
+are still executing (DESIGN.md §7).
+
+Two pieces:
+
+* :class:`BucketPlan` — greedy first-fit packing of flattened leaves into
+  byte-capped, dtype-pure buckets (the same first-applicable-candidate
+  discipline as ``annotate.ann_first_fit``, applied to sizes instead of
+  specs).  Pure shape metadata: it can be built from arrays or
+  ``ShapeDtypeStruct``s and is hashable trace-time state.
+* :func:`overlap_taps` — the ``custom_vjp`` emission trick: an identity
+  on the *params* whose backward rule packs each bucket's cotangents into
+  one fused buffer and pins its layout, forcing the partitioner to
+  materialise that bucket's gradient reduction at that point of the
+  backward computation rather than sinking every all-reduce to the end.
+
+Worked example (pure packing — runs anywhere)::
+
+    >>> import jax
+    >>> leaves = [jax.ShapeDtypeStruct((256, 256), 'float32'),   # 256 KiB
+    ...           jax.ShapeDtypeStruct((1024,), 'float32'),      #   4 KiB
+    ...           jax.ShapeDtypeStruct((512, 512), 'float32')]   #   1 MiB
+    >>> plan = BucketPlan.build(leaves, cap_bytes=300 * 1024)
+    >>> plan.n_buckets          # leaf 1 first-fits into leaf 0's bucket;
+    2
+    >>> plan.assignment()       # the 1 MiB leaf is oversized -> own bucket
+    (0, 0, 1)
+    >>> [b.nbytes for b in plan.buckets]
+    [266240, 1048576]
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 4 << 20  # 4 MiB — see DESIGN.md §7 tradeoff model
+
+
+def leaf_nbytes(leaf) -> int:
+    """Payload bytes of one array-like (shape/dtype duck-typed)."""
+    return math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One bucket: leaf indices (into the flattened tree), shared dtype,
+    per-leaf element counts, and total payload bytes."""
+    indices: tuple[int, ...]
+    dtype: str
+    elems: tuple[int, ...]
+    nbytes: int
+
+    @property
+    def n_elems(self) -> int:
+        return sum(self.elems)
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """First-fit packing of a leaf list into byte-capped buckets.
+
+    Invariants (property-tested by ``tests/test_bucketing.py``):
+
+    * every leaf index appears in exactly one bucket;
+    * every bucket's payload is <= ``cap_bytes`` unless it holds a single
+      oversized leaf (a leaf larger than the cap gets a bucket to itself);
+    * all leaves in a bucket share a dtype (buckets are concatenated into
+      one flat buffer, so mixed dtypes never pack together).
+    """
+    buckets: tuple[Bucket, ...]
+    cap_bytes: int
+
+    @classmethod
+    def build(cls, leaves, cap_bytes: int = DEFAULT_BUCKET_BYTES,
+              lead_dims: int = 0) -> "BucketPlan":
+        """Pack ``leaves`` (arrays or ShapeDtypeStructs) greedily: each
+        leaf, in order, goes into the first open same-dtype bucket with
+        room, else opens a new bucket.  ``lead_dims`` leading dims are
+        excluded from the size accounting (e.g. the per-worker stacking
+        dim of ``gradient_sync`` inputs — packing is about the *synced*
+        payload, which is per-worker)."""
+        if cap_bytes <= 0:
+            raise ValueError(f"cap_bytes must be positive, got {cap_bytes}")
+        open_: list[list[int]] = []   # per bucket: leaf indices
+        used: list[int] = []          # per bucket: payload bytes
+        dtypes: list[str] = []
+        for i, leaf in enumerate(leaves):
+            shape = tuple(leaf.shape)[lead_dims:]
+            nb = math.prod(shape) * jnp.dtype(leaf.dtype).itemsize
+            dt = str(jnp.dtype(leaf.dtype))
+            for b in range(len(open_)):
+                # a bucket already at/over cap is closed (oversized leaves
+                # must stay alone; normal buckets stop accepting at cap)
+                if (dtypes[b] == dt and used[b] < cap_bytes
+                        and used[b] + nb <= cap_bytes):
+                    open_[b].append(i)
+                    used[b] += nb
+                    break
+            else:
+                open_.append([i])
+                used.append(nb)
+                dtypes.append(dt)
+        buckets = []
+        for b, idx in enumerate(open_):
+            elems = tuple(math.prod(tuple(leaves[i].shape)[lead_dims:])
+                          for i in idx)
+            buckets.append(Bucket(indices=tuple(idx), dtype=dtypes[b],
+                                  elems=elems, nbytes=used[b]))
+        return cls(buckets=tuple(buckets), cap_bytes=cap_bytes)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def assignment(self) -> tuple[int, ...]:
+        """``assignment()[leaf_index] -> bucket index``."""
+        out: dict[int, int] = {}
+        for b, bucket in enumerate(self.buckets):
+            for i in bucket.indices:
+                out[i] = b
+        return tuple(out[i] for i in range(len(out)))
+
+    # ------------------------------------------------------------------
+    # pack / unpack
+    def pack(self, leaves, lead_dims: int = 0) -> list:
+        """Concatenate each bucket's leaves (flattened past ``lead_dims``)
+        into one buffer per bucket: shape ``lead + (bucket elems,)``."""
+        out = []
+        for bucket in self.buckets:
+            parts = []
+            for i in bucket.indices:
+                leaf = leaves[i]
+                lead = leaf.shape[:lead_dims]
+                parts.append(jnp.reshape(leaf, lead + (-1,)))
+            out.append(parts[0] if len(parts) == 1
+                       else jnp.concatenate(parts, axis=lead_dims))
+        return out
+
+    def unpack(self, buffers, like_leaves, lead_dims: int = 0) -> list:
+        """Inverse of :meth:`pack`: split each bucket buffer back into the
+        original leaf shapes (minus any reduced lead dims: shapes are taken
+        from ``like_leaves`` past ``lead_dims``)."""
+        out: list = [None] * sum(len(b.indices) for b in self.buckets)
+        for bucket, buf in zip(self.buckets, buffers):
+            offset = 0
+            for i, n in zip(bucket.indices, bucket.elems):
+                shape = tuple(like_leaves[i].shape)[lead_dims:]
+                lead = buf.shape[:-1]
+                piece = jax.lax.slice_in_dim(buf, offset, offset + n,
+                                             axis=buf.ndim - 1)
+                out[i] = jnp.reshape(piece, lead + shape)
+                offset += n
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the custom_vjp emission trick (DESIGN.md §7)
+
+def _pin_replicated(buf):
+    """Force ``buf`` (a fully-reduced bucket buffer) to materialise as one
+    replicated array at this point of the graph; identity without a mesh."""
+    from .compat import current_mesh
+    m = current_mesh()
+    if m is None or m.size == 1:
+        return buf
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(buf, NamedSharding(m, P()))
+
+
+def overlap_taps(params, cap_bytes: int = DEFAULT_BUCKET_BYTES,
+                 sync=None):
+    """Identity on ``params`` whose VJP emits one fused per-bucket gradient
+    buffer *inside* the backward computation.
+
+    Forward: returns ``params`` unchanged (bitwise — a ``custom_vjp``
+    identity).  Backward: cotangents are grouped by a :class:`BucketPlan`
+    over the param leaves; each bucket's cotangents are concatenated into
+    one flat buffer, passed through ``sync`` (default: a replicated layout
+    pin, which under GSPMD forces the partitioner to materialise that
+    bucket's gradient all-reduce at this point instead of sinking all of
+    them past the end of backward), and split back.  Gradient *values* are
+    unchanged, so a step with taps is numerically identical to one
+    without — only the collective schedule differs.
+    """
+    sync = sync or _pin_replicated
+    leaves, treedef = jax.tree.flatten(params)
+    plan = BucketPlan.build(leaves, cap_bytes=cap_bytes)
+
+    @jax.custom_vjp
+    def tap(*xs):
+        return xs
+
+    def tap_fwd(*xs):
+        return xs, None
+
+    def tap_bwd(_, gs):
+        buffers = [sync(buf) for buf in plan.pack(gs)]
+        return tuple(plan.unpack(buffers, gs))
+
+    tap.defvjp(tap_fwd, tap_bwd)
+    return treedef.unflatten(tap(*leaves))

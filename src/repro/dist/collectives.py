@@ -14,10 +14,26 @@ this analytically; this module is the on-mesh counterpart over a
   an all-reduce of only that shard across ``pod`` (level-2), and an
   all-gather within ``data`` to restore the full replica.
 
-Both modes produce identical sums; the hierarchical HLO's cross-pod
+* ``mode="bucketed"`` — the overlap-friendly schedule (DESIGN.md §7):
+  leaves are packed into byte-capped buckets by a ``BucketPlan`` and each
+  bucket is reduced with the hierarchical schedule (flat where the two
+  coincide) as its own independent collective chain, so a scheduler can
+  overlap bucket *k*'s sync with whatever produces bucket *k+1*.
+
+All modes produce identical sums; the hierarchical HLO's cross-pod
 all-reduce moves 1/|data| of the bytes — the §3.3 claim, checked from the
 compiled HLO by ``tests/test_dist.py`` and benchmarked by
-``benchmarks/bench_dist.py``.
+``benchmarks/bench_dist.py`` (which also checks that the per-bucket
+cross-pod bytes sum back to the monolithic hierarchical total).
+
+Worked example (1-device fallback — runs anywhere)::
+
+    >>> import jax, jax.numpy as jnp
+    >>> mesh = jax.make_mesh((1,), ("data",))
+    >>> grads = {"w": jnp.ones((4, 3))}      # 4 workers, one 3-vector each
+    >>> out = gradient_sync(mesh, grads, mode="bucketed")
+    >>> out["w"].tolist()                    # leading-dim sum, same tree
+    [4.0, 4.0, 4.0]
 """
 from __future__ import annotations
 
@@ -27,8 +43,9 @@ from jax.sharding import PartitionSpec as P
 
 from . import compat
 from .annotate import DATA_AXES
+from .bucketing import DEFAULT_BUCKET_BYTES, BucketPlan
 
-MODES = ("flat", "hierarchical")
+MODES = ("flat", "hierarchical", "bucketed")
 
 
 def worker_axes(mesh):
@@ -68,7 +85,9 @@ def _hier_body(n_data):
     return sync
 
 
-def gradient_sync(mesh, grads, mode: str = "flat"):
+def gradient_sync(mesh, grads, mode: str = "flat", *,
+                  bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                  plan: BucketPlan | None = None):
     """Sum a pytree of per-worker gradients over their leading worker dim.
 
     Every leaf of ``grads`` has shape ``(W, ...)`` with ``W`` the product
@@ -76,9 +95,22 @@ def gradient_sync(mesh, grads, mode: str = "flat"):
     leading-dim sum, replicated over the mesh.  ``mode="hierarchical"``
     falls back to flat when the mesh has no ``pod`` axis or no multi-way
     ``data`` axis (the two schedules coincide there).
+
+    ``mode="bucketed"`` packs the leaves into ``bucket_bytes``-capped
+    buckets (``plan`` overrides the packing; its byte accounting is
+    per-worker, i.e. excludes the leading ``W`` dim) and reduces each
+    bucket with the hierarchical schedule as an independent collective
+    chain.  Numerically identical to the other modes.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode == "bucketed":
+        leaves, treedef = jax.tree.flatten(grads)
+        plan = plan or BucketPlan.build(leaves, cap_bytes=bucket_bytes,
+                                        lead_dims=1)
+        buffers = plan.pack(leaves, lead_dims=1)
+        synced = gradient_sync(mesh, buffers, mode="hierarchical")
+        return treedef.unflatten(plan.unpack(synced, leaves, lead_dims=1))
     waxes = worker_axes(mesh)
     sizes = dict(mesh.shape)
     n_workers = 1

@@ -23,6 +23,18 @@ Layout policy (megatron-style tensor parallel + zero-style FSDP):
 
 Params stacked along a leading ``n_super`` (or encoder-depth) axis get a
 ``None`` prepended: the scan axis is never sharded.
+
+Worked example — a stacked attention projection on a 1-device dev-box
+mesh (no "data" axis, so FSDP entries resolve to ``None``; the scan axis
+gets the prepended ``None``)::
+
+    >>> import jax
+    >>> mesh = jax.make_mesh((1,), ("model",))
+    >>> params = {"blocks": {"wq": jax.ShapeDtypeStruct((4, 8, 2, 16),
+    ...                                                 "float32")}}
+    >>> specs = param_pspecs(cfg=None, params=params, mesh=mesh)
+    >>> specs["blocks"]["wq"] == P(None, None, "model", None)
+    True
 """
 from __future__ import annotations
 

@@ -33,6 +33,11 @@ def main():
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--mesh", choices=["host", "single", "multi"],
                     default="host")
+    ap.add_argument("--overlap", action="store_true",
+                    help="bucketed gradient sync emitted inside backward "
+                         "(DESIGN.md §7); numerically identical")
+    ap.add_argument("--bucket-mb", type=float, default=4.0,
+                    help="bucket byte cap in MiB for --overlap")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,7 +56,8 @@ def main():
     tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1),
                        checkpoint_every=args.checkpoint_every,
-                       grad_clip=5.0)
+                       grad_clip=5.0, overlap=args.overlap,
+                       bucket_mb=args.bucket_mb)
     data = PrefetchIterator(
         SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps),
         depth=4)

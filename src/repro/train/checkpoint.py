@@ -29,17 +29,46 @@ def save_checkpoint(path: str, state: dict, step: int | None = None):
     return p
 
 
+def _leaf_name(path) -> str:
+    """Human-readable pytree path for error messages."""
+    return jax.tree_util.keystr(path) or "<root>"
+
+
 def load_checkpoint(path: str, like: dict):
-    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    """Restore into the structure of ``like``.
+
+    Every leaf is validated against ``like`` — shape and dtype — and a
+    ``ValueError`` naming the offending leaf path is raised on mismatch,
+    instead of silently mis-restoring into the wrong structure (e.g.
+    loading a reduced-config checkpoint into a full-size model, or fp32
+    momentum into bf16 params).
+    """
     p = Path(path)
-    manifest = json.loads((p / "manifest.json").read_text())
-    leaves, treedef = jax.tree.flatten(like)
-    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    manifest_file = p / "manifest.json"
+    if not manifest_file.exists():
+        raise FileNotFoundError(f"no checkpoint manifest at {manifest_file}")
+    manifest = json.loads(manifest_file.read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if manifest["n_leaves"] != len(flat):
+        raise ValueError(
+            f"checkpoint at {p} has {manifest['n_leaves']} leaves but the "
+            f"target structure has {len(flat)} — wrong checkpoint for this "
+            f"model/optimizer state?")
     loaded = []
-    for i, ref in enumerate(leaves):
+    for i, (kpath, ref) in enumerate(flat):
         arr = np.load(p / f"leaf_{i}.npy")
-        assert list(arr.shape) == list(np.asarray(ref).shape), \
-            (i, arr.shape, np.asarray(ref).shape)
-        loaded.append(arr.astype(np.asarray(ref).dtype))
+        # shape/dtype come straight off the leaf — no host materialization
+        # of (possibly sharded, multi-GB) target state just to compare
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"checkpoint leaf {i} ({_leaf_name(kpath)}): saved shape "
+                f"{tuple(arr.shape)} != expected {tuple(ref.shape)} — the "
+                f"checkpoint was written for a different configuration")
+        if arr.dtype != np.dtype(ref.dtype):
+            raise ValueError(
+                f"checkpoint leaf {i} ({_leaf_name(kpath)}): saved dtype "
+                f"{arr.dtype} != expected {ref.dtype} — refusing to cast "
+                f"silently; convert explicitly if this is intended")
+        loaded.append(arr)
     state = jax.tree.unflatten(treedef, loaded)
     return state, manifest.get("step")

@@ -39,6 +39,11 @@ class TrainConfig:
     checkpoint_every: int = 0
     checkpoint_dir: str = "checkpoints"
     grad_clip: float = 1.0
+    # bucketed gradient sync emitted inside backward (DESIGN.md §7):
+    # the §4 lazy-push analogue on the jit path. Numerically identical to
+    # overlap=False; only the collective schedule changes.
+    overlap: bool = False
+    bucket_mb: float = 4.0
 
 
 class Trainer:
@@ -61,11 +66,21 @@ class Trainer:
     def _make_step(self):
         model, optimizer, schedule = self.model, self.optimizer, self.schedule
         clip = self.tcfg.grad_clip
+        overlap = self.tcfg.overlap
+        bucket_bytes = max(int(self.tcfg.bucket_mb * 2**20), 1)
+
+        def loss_fn(params, batch):
+            if overlap:
+                # route params through per-bucket custom_vjp taps so each
+                # bucket's gradient reduction is emitted inside backward
+                from repro.dist import overlap_taps
+                params = overlap_taps(params, cap_bytes=bucket_bytes)
+            return model.loss(params, batch)
 
         @jax.jit
         def step(params, opt_state, batch):
             (loss, metrics), grads = jax.value_and_grad(
-                model.loss, has_aux=True)(params, batch)
+                loss_fn, has_aux=True)(params, batch)
             if clip:
                 gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                                   for g in jax.tree.leaves(grads)))

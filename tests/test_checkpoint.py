@@ -1,0 +1,54 @@
+"""load_checkpoint validation: clear errors on structure/shape/dtype
+mismatch instead of silent mis-restores (ISSUE 2 satellite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import load_checkpoint, save_checkpoint
+
+
+def _state():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones(3, jnp.float32)},
+            "step_scale": jnp.asarray(0.5, jnp.float32)}
+
+
+def test_roundtrip_preserves_values(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path / "ck"), state, step=3)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, step = load_checkpoint(str(tmp_path / "ck"), like)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_missing_manifest_is_clear(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        load_checkpoint(str(tmp_path / "nope"), _state())
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path / "ck"), _state())
+    like = {"params": {"w": jnp.zeros((2, 3))}}
+    with pytest.raises(ValueError, match="leaves"):
+        load_checkpoint(str(tmp_path / "ck"), like)
+
+
+def test_shape_mismatch_names_the_leaf(tmp_path):
+    save_checkpoint(str(tmp_path / "ck"), _state())
+    like = _state()
+    like["params"]["w"] = jnp.zeros((4, 3), jnp.float32)  # wrong shape
+    with pytest.raises(ValueError) as e:
+        load_checkpoint(str(tmp_path / "ck"), like)
+    msg = str(e.value)
+    assert "'w'" in msg and "(2, 3)" in msg and "(4, 3)" in msg
+
+
+def test_dtype_mismatch_refuses_silent_cast(tmp_path):
+    save_checkpoint(str(tmp_path / "ck"), _state())
+    like = _state()
+    like["params"]["b"] = jnp.ones(3, jnp.bfloat16)  # wrong dtype
+    with pytest.raises(ValueError, match="dtype"):
+        load_checkpoint(str(tmp_path / "ck"), like)

@@ -1,0 +1,69 @@
+"""Docs stay honest: every file README.md references must exist, and the
+worked examples in the ``repro.dist`` docstrings must run (doctest).
+
+CI runs this as a dedicated docs job; it is also part of tier-1 so a PR
+cannot rename a module out from under the README.
+"""
+import doctest
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+_MD_LINK = re.compile(r"\]\(([^)#]+)\)")
+_CODE_PATH = re.compile(r"`([\w./-]+/[\w./-]+)`")
+
+DIST_MODULES = ["repro.dist", "repro.dist.annotate", "repro.dist.bucketing",
+                "repro.dist.collectives", "repro.dist.partition",
+                "repro.dist.compat"]
+
+
+def _referenced_paths():
+    text = (ROOT / "README.md").read_text()
+    refs = set()
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1).strip()
+        if "://" not in target:
+            refs.add(target)
+    for m in _CODE_PATH.finditer(text):
+        p = m.group(1)
+        # only things that look like repo paths (not shell flags / dotted
+        # module names / spec fragments)
+        if p.startswith(("src/", "tests/", "benchmarks/", "examples/",
+                         "experiments/")) or p.endswith((".py", ".md")):
+            refs.add(p.rstrip("/"))
+    return sorted(refs)
+
+
+def test_readme_exists_and_has_front_door_sections():
+    text = (ROOT / "README.md").read_text()
+    for required in ("Install", "Quickstart", "Concept map",
+                     "pip install -e .", "python -m pytest -x -q"):
+        assert required in text, f"README.md lost its '{required}' section"
+
+
+@pytest.mark.parametrize("ref", _referenced_paths())
+def test_readme_referenced_files_exist(ref):
+    assert (ROOT / ref).exists(), f"README.md references missing path: {ref}"
+
+
+@pytest.mark.parametrize("modname", DIST_MODULES)
+def test_dist_doctests_pass(modname):
+    mod = importlib.import_module(modname)
+    result = doctest.testmod(mod, verbose=False)
+    assert result.failed == 0, f"{modname}: {result.failed} doctest failures"
+
+
+def test_dist_modules_are_documented():
+    """The PR-1 subsystem shipped nearly undocumented; keep it documented:
+    every dist module needs a real docstring and the public API a worked
+    example somewhere in the package."""
+    total_examples = 0
+    for modname in DIST_MODULES:
+        mod = importlib.import_module(modname)
+        assert mod.__doc__ and len(mod.__doc__.strip()) > 80, modname
+        total_examples += doctest.testmod(mod, verbose=False).attempted
+    assert total_examples >= 10, "dist worked examples eroded"
