@@ -116,8 +116,8 @@ def _measure(mode: str = "all") -> dict:
     return out
 
 
-def _analytic_bucket_shares(vals) -> dict[int, float]:
-    """Per-bucket share of inter-machine traffic from the two-level
+def _analytic_bucket_shares(vals) -> tuple[dict[int, float], dict[int, float]]:
+    """Per-bucket ``(l2_shares, l1_over_l2_ratios)`` from the two-level
     KVStore byte counters (one key per bucket) — the analytic side of the
     bucketed cross-validation."""
     from repro.core import KVStoreDist

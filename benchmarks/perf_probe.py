@@ -73,9 +73,11 @@ def main():
     from repro.launch.dryrun import analyze, lower_and_compile, probe_cfg
     from repro.launch.mesh import make_production_mesh
 
-    long_ctx = (args.shape == "long_500k"
-                and args.arch in LONG_CONTEXT_ARCHS)
-    cfg = get_config(args.arch, long_context=long_ctx)
+    long_ctx = (args.shape.startswith("long_500k")
+                and (args.arch in LONG_CONTEXT_ARCHS
+                     or perf_flags.FLAGS.seq_shard))
+    cfg = get_config(args.arch, long_context=long_ctx,
+                     seq_shard=perf_flags.FLAGS.seq_shard)
     mesh = make_production_mesh(multi_pod=args.multi_pod)
 
     _, compiled, tl, tc = lower_and_compile(cfg, args.shape, mesh)

@@ -37,14 +37,17 @@ SHAPE_TOKENS = {  # (tokens per step, flops factor: train 6, fwd-only 2)
     "prefill_32k": (32 * 32768, 2),
     "decode_32k": (128 * 1, 2),
     "long_500k": (1 * 1, 2),
+    "long_500k_prefill": (1 * 524288, 2),
 }
 
 
 def _n_super(rec) -> int:
     from repro.configs import LONG_CONTEXT_ARCHS, get_config
-    long_ctx = (rec["shape"] == "long_500k"
-                and rec["arch"] in LONG_CONTEXT_ARCHS)
-    return get_config(rec["arch"], long_context=long_ctx).n_super
+    seq_shard = bool(rec.get("seq_shard"))
+    long_ctx = (rec["shape"].startswith("long_500k")
+                and (rec["arch"] in LONG_CONTEXT_ARCHS or seq_shard))
+    return get_config(rec["arch"], long_context=long_ctx,
+                      seq_shard=seq_shard).n_super
 
 
 def composed(rec, field_path, ns):
@@ -101,10 +104,16 @@ def analyze_record(rec):
 
 def load_all(mesh="16x16"):
     out = []
-    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+    # plain records plus the __ring-suffixed seq-shard records the
+    # dry-run's --seq-shard mode writes (same shape names, ring schedule)
+    files = sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")) + \
+        sorted(DRYRUN_DIR.glob(f"*__{mesh}__ring.json"))
+    for f in files:
         rec = json.loads(f.read_text())
         r = analyze_record(rec)
         if r:
+            if rec.get("seq_shard"):
+                r["shape"] += "+ring"
             out.append(r)
     skips = []
     for f in sorted(DRYRUN_DIR.glob("*__skip.json")):

@@ -3,41 +3,83 @@ microbenches + the roofline table from the dry-run artifacts.
 
 Prints ``name,us_per_call,derived`` style CSV sections, then a validation
 summary checking the paper's claims (exit 1 on any validation failure).
+
+``--json PATH`` additionally writes machine-readable records — one
+``BENCH_<name>.json`` per benchmark plus ``BENCH_summary.json`` — into
+the ``PATH`` directory (the perf trajectory artifact CI uploads).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
+from pathlib import Path
+
+# make `python benchmarks/run.py` work from anywhere: the repo root (for
+# the `benchmarks` package) and src/ (for `repro`) join sys.path
+_ROOT = Path(__file__).resolve().parents[1]
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def _jsonable(v):
+    try:
+        json.dumps(v)
+        return v
+    except TypeError:
+        return float(v) if hasattr(v, "__float__") else str(v)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="directory for BENCH_*.json records (created)")
+    args = ap.parse_args()
+
     failures = {}
+    records = {}
+
+    def record(name, rows, fails):
+        failures[name] = fails
+        records[name] = {
+            "bench": name,
+            "rows": [[_jsonable(x) for x in row] for row in rows],
+            "failures": list(fails) if fails else [],
+        }
 
     from benchmarks import (bench_dist, bench_engine, bench_kernels,
-                            bench_memory, bench_raw_perf, bench_scalability)
+                            bench_memory, bench_raw_perf, bench_ring,
+                            bench_scalability)
 
     print("## Fig.6 raw performance (executor vs hand-jit vs eager)")
     rows = bench_raw_perf.run()
-    failures["fig6"] = bench_raw_perf.validate(rows)
+    record("fig6", rows, bench_raw_perf.validate(rows))
 
     print("\n## Fig.7 memory allocation strategies")
     rows = bench_memory.run()
-    failures["fig7"] = bench_memory.validate(rows)
+    record("fig7", rows, bench_memory.validate(rows))
 
     print("\n## Fig.8 distributed scalability (two-level KVStore)")
     rows, curves = bench_scalability.run()
-    failures["fig8"] = bench_scalability.validate(rows, curves)
+    record("fig8", rows, bench_scalability.validate(rows, curves))
 
     print("\n## §3.3 on-mesh gradient sync (flat vs hierarchical, 2x4x2)")
     rows = bench_dist.run()
-    failures["dist"] = bench_dist.validate(rows)
+    record("dist", rows, bench_dist.validate(rows))
+
+    print("\n## §8 ring attention (sequence-sharded long context)")
+    rows = bench_ring.run()
+    record("ring", rows, bench_ring.validate(rows))
 
     print("\n## Dependency engine")
     rows = bench_engine.run()
-    failures["engine"] = bench_engine.validate(rows)
+    record("engine", rows, bench_engine.validate(rows))
 
     print("\n## Pallas kernels (interpret-mode correctness + oracle walls)")
     rows = bench_kernels.run()
-    failures["kernels"] = bench_kernels.validate(rows)
+    record("kernels", rows, bench_kernels.validate(rows))
 
     print("\n## Roofline (from experiments/dryrun)")
     try:
@@ -51,6 +93,25 @@ def main() -> None:
     for k, v in failures.items():
         print(f"{k}: {'PASS' if not v else v}")
         bad = bad or bool(v)
+
+    if args.json:
+        import jax
+        outdir = Path(args.json)
+        outdir.mkdir(parents=True, exist_ok=True)
+        meta = {"timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                           time.gmtime()),
+                "backend": jax.default_backend(),
+                "jax_version": jax.__version__}
+        for name, rec in records.items():
+            path = outdir / f"BENCH_{name}.json"
+            path.write_text(json.dumps({**meta, **rec}, indent=1))
+        summary = {**meta,
+                   "benches": {k: ("PASS" if not v else list(v))
+                               for k, v in failures.items()}}
+        (outdir / "BENCH_summary.json").write_text(
+            json.dumps(summary, indent=1))
+        print(f"wrote {len(records) + 1} BENCH_*.json records to {outdir}")
+
     sys.exit(1 if bad else 0)
 
 

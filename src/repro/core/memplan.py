@@ -27,15 +27,27 @@ import numpy as np
 from .graph import Graph, NodeRef
 from . import ops as _ops
 
-_DTYPE_BYTES = {"float32": 4, "float64": 8, "float16": 2, "bfloat16": 2,
-                "int32": 4, "int64": 8, "bool": 1, "int8": 1, "uint8": 1}
+_DTYPE_BYTES = {"float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+                "float8_e4m3fn": 1, "float8_e5m2": 1,
+                "int64": 8, "uint64": 8, "int32": 4, "uint32": 4,
+                "int16": 2, "uint16": 2, "int8": 1, "uint8": 1, "bool": 1}
 
 
 def nbytes(shape, dtype) -> int:
+    """Bytes of one ``(shape, dtype)`` buffer.
+
+    Unknown dtypes are an error, not a silent 4-byte guess — a planner
+    that under- or over-counts buffer sizes corrupts the co-share free
+    pool (buffers are recycled by exact size)."""
+    key = str(dtype)
+    if key not in _DTYPE_BYTES:
+        raise ValueError(
+            f"memplan.nbytes: unknown dtype {key!r}; add its width to "
+            f"memplan._DTYPE_BYTES (known: {sorted(_DTYPE_BYTES)})")
     n = 1
     for d in shape:
         n *= int(d)
-    return n * _DTYPE_BYTES.get(str(dtype), 4)
+    return n * _DTYPE_BYTES[key]
 
 
 @dataclass

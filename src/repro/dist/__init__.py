@@ -13,6 +13,9 @@ The distribution layer of the reproduction (DESIGN.md §5, §7):
 * ``bucketing`` — ``BucketPlan`` (first-fit byte-capped gradient packing)
   and ``overlap_taps`` (the custom_vjp trick that emits each bucket's
   sync inside the backward computation — the §4 lazy-push analogue);
+* ``ring`` — sequence-sharded exact attention as a rotating k/v
+  collective-permute schedule with a reverse-ring ``custom_vjp``
+  (DESIGN.md §8), plus its analytic permute-byte model;
 * ``compat`` — backfills ``jax.set_mesh`` / ``jax.shard_map`` on older jax
   (imported first, for its side effects).
 
@@ -40,6 +43,8 @@ from .bucketing import (DEFAULT_BUCKET_BYTES, Bucket, BucketPlan,
 from .collectives import gradient_sync, worker_axes
 from .partition import (batch_pspecs, cache_pspecs, make_shardings,
                         param_pspecs)
+from .ring import RingSpec, contributing_steps, ring_attention, \
+    ring_permute_bytes
 
 __all__ = [
     "BATCH", "DATA_AXES", "ann", "ann_first_fit", "_mesh_axes",
@@ -47,4 +52,6 @@ __all__ = [
     "Bucket", "BucketPlan", "DEFAULT_BUCKET_BYTES", "leaf_nbytes",
     "overlap_taps",
     "param_pspecs", "batch_pspecs", "cache_pspecs", "make_shardings",
+    "RingSpec", "contributing_steps", "ring_attention",
+    "ring_permute_bytes",
 ]

@@ -115,18 +115,24 @@ def param_pspecs(cfg, params, mesh):
 def batch_pspecs(cfg, batch, mesh, kind: str = "train"):
     """Batch inputs: leading dim over the data axes, rest replicated.
 
-    The same rule serves train/prefill/decode (``kind`` kept for future
-    sequence-sharded long-context batches).
+    The same rule serves train/prefill/decode; ``kind="seq"`` is the
+    sequence-sharded long-context layout (DESIGN.md §8): dim 1 — the
+    sequence — additionally over ``model``, feeding the ring-attention
+    path with already-S-sharded tokens so the embedding lookup and the
+    residual stream never materialize the full sequence per device.  As
+    everywhere, a non-dividing axis is dropped, never an error.
     """
-    del kind
     names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
+    seq = kind == "seq"
 
     def rule(leaf):
         shape = tuple(leaf.shape)
         if not shape:
             return P()
-        return _resolve((BATCH,) + (None,) * (len(shape) - 1),
-                        shape, names, sizes)
+        entries = [BATCH] + [None] * (len(shape) - 1)
+        if seq and len(shape) >= 2:
+            entries[1] = "model"
+        return _resolve(tuple(entries), shape, names, sizes)
 
     return jax.tree.map(rule, batch)
 

@@ -1,0 +1,386 @@
+"""Ring attention: exact attention over a sequence-sharded batch
+(DESIGN.md §8; the §3.3/§4 overlap idea applied to the attention inner
+loop).
+
+Every device holds one contiguous sequence chunk of q/k/v (S/P tokens,
+P = size of the ring mesh axis).  Attention over the full sequence is P
+sequential block-exchanges: each step updates the local queries' online
+softmax state (m, l, acc) against the currently-resident k/v chunk, then
+collective-permutes k/v one hop around the ring — the permute of step
+t+1's chunk is independent of step t's flash compute, so XLA's
+latency-hiding scheduler overlaps them (overlap condition: DESIGN.md §8).
+The per-device score footprint is one (S/P, S/P) block per head instead
+of (S, S): summed over the mesh that is O(S·S/P) versus O(S²·P) —
+the only change that makes ``long_500k`` representable at all.
+
+Rotation-index bookkeeping: after t forward hops, device ``i`` holds the
+chunk that *originated* on device ``(i - t) mod P``, so its keys live at
+global positions ``src·(S/P) + local``.  Causal and sliding-window masks
+only consume the *difference* ``qpos - kpos``, whose chunk part is the
+static value ``t`` (for ``i ≥ t``) or ``t - P`` (wrapped, i.e. a future
+chunk) — which is what lets the Pallas flash kernel, whose mask offsets
+are compile-time constants, run unchanged as the per-step inner kernel
+(``jax.lax.cond`` selects between the two static variants).
+
+The backward pass is a ``jax.custom_vjp`` running the ring in the
+*reverse* direction: (k, v) rotate together with their gradient
+accumulators (dk, dv), so after the full P-hop cycle each chunk's
+gradient lands back on its home device; dq stays resident.  Saved
+residuals are O(S/P) per device: the home q/k/v chunks, the normalized
+output and the log-sum-exp — the flash recomputation trick at ring scale.
+
+``ring_permute_bytes`` is the analytic per-device collective-permute
+byte model; ``benchmarks/bench_ring.py`` cross-validates it against the
+compiled HLO exactly, in the style PR 1–2 established for all-reduce.
+
+Worked example of the mask bookkeeping (pure, no devices)::
+
+    >>> # 4 shards x 32 tokens, window 33: only ring steps 0 and 1 can
+    >>> # contribute (step 2 sits >= 33 tokens behind every query)
+    >>> contributing_steps(4, 32, causal=True, window=33)
+    [0, 1]
+    >>> contributing_steps(4, 32, causal=True, window=None)
+    [0, 1, 2, 3]
+    >>> # backward (reverse ring): the diagonal first, wrapped tail last
+    >>> contributing_steps(4, 32, causal=True, window=33, direction="bwd")
+    [0, 3]
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import NEG_INF
+
+from . import compat
+from .annotate import BATCH, _resolve
+
+
+@dataclass(frozen=True)
+class RingSpec:
+    """Static (hashable) configuration of one ring-attention call."""
+    n_shards: int
+    axis: str
+    causal: bool = True
+    window: int | None = None
+    softcap: float | None = None
+    inner: str = "jnp"          # per-step kernel: "jnp" | "pallas"
+    block_q: int = 128
+    block_k: int = 128
+
+
+# ---------------------------------------------------------------------------
+# rotation-index bookkeeping
+
+def contributing_steps(n_shards: int, chunk: int, *, causal: bool,
+                       window: int | None, direction: str = "fwd"):
+    """Ring steps on which at least one device has an unmasked score.
+
+    Forward rotation: at step ``t`` device ``i`` holds chunk
+    ``(i - t) % P`` — relative chunk offset ``t`` (past) or ``t - P``
+    (future).  Backward rotates in reverse: offsets ``-t`` / ``P - t``.
+    A step contributes iff some (qpos - kpos) difference passes both the
+    causal (`>= 0`) and window (`<= window - 1`) constraints; the extreme
+    differences of step offset ``r`` are ``r·chunk ± (chunk - 1)``.
+    """
+    def contributes(rel):
+        lo = rel * chunk - (chunk - 1)
+        hi = rel * chunk + (chunk - 1)
+        if causal and hi < 0:
+            return False
+        if window is not None and lo > window - 1:
+            return False
+        return True
+
+    steps = []
+    for t in range(n_shards):
+        rels = ((t,) if t == 0 else
+                (t, t - n_shards) if direction == "fwd" else
+                (-t, n_shards - t))
+        if any(contributes(r) for r in rels):
+            steps.append(t)
+    return steps
+
+
+def ring_permute_bytes(B: int, S: int, K: int, hd: int, n_shards: int, *,
+                       itemsize: int = 2, causal: bool = True,
+                       window: int | None = None) -> dict:
+    """Analytic per-device collective-permute bytes of one ring attention.
+
+    Forward rotates (k, v) — ``2·B·(S/P)·K·hd·itemsize`` bytes per step —
+    for ``max(contributing_steps)`` hops (a windowed ring stops early: the
+    remaining chunks are masked everywhere).  Backward rotates k/v for
+    P-1 hops (they are dead after the last compute step) and the f32
+    gradient accumulators (dk, dv) for the full P hops — they must
+    complete the cycle back to their home shard, regardless of masking.
+    Cross-validated against compiled HLO by ``benchmarks/bench_ring.py``.
+    """
+    if S % n_shards:
+        raise ValueError(f"S={S} not divisible by n_shards={n_shards}")
+    chunk_elems = B * (S // n_shards) * K * hd
+    chunk = chunk_elems * itemsize
+    chunk32 = chunk_elems * 4
+    if n_shards == 1:
+        fwd_rot = bwd_rot = 0
+        bwd_kv_rot = 0
+    else:
+        fwd_rot = max(contributing_steps(n_shards, S // n_shards,
+                                         causal=causal, window=window))
+        bwd_rot = n_shards
+        bwd_kv_rot = n_shards - 1
+    fwd_total = fwd_rot * 2 * chunk
+    bwd_total = bwd_kv_rot * 2 * chunk + bwd_rot * 2 * chunk32
+    return {
+        "chunk_bytes": chunk,
+        "per_step_fwd": 2 * chunk,
+        "per_step_bwd": 2 * (chunk + chunk32),
+        "fwd_rotations": fwd_rot,
+        "bwd_rotations": bwd_rot,
+        "fwd_total": fwd_total,
+        "bwd_total": bwd_total,
+        "grad_total": fwd_total + bwd_total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-step block math (jnp inner; f32 accumulation, GQA via head-repeat)
+
+def _mask(Sq, Sk, q_off, kv_off, causal, window):
+    qpos = q_off + jnp.arange(Sq)
+    kpos = kv_off + jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _jnp_step(spec: RingSpec, q32, k, v, m, l, acc, q_off, kv_off):
+    """One online-softmax block update.  q32: (B, Sq, H, hd) f32;
+    k/v: (B, Sk, K, hd); m/l: (B, Sq, H); acc: (B, Sq, H, hd).
+    ``q_off``/``kv_off`` may be traced (axis_index-derived)."""
+    B, Sq, H, hd = q32.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bshd->bqhs", q32, kk) * scale
+    if spec.softcap is not None:
+        s = jnp.tanh(s / spec.softcap) * spec.softcap
+    msk = _mask(Sq, Sk, q_off, kv_off, spec.causal, spec.window)
+    s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m, m_cur)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(msk[None, :, None, :], p, 0.0)    # fully-masked block: 0
+    corr = jnp.exp(m - m_new)
+    l_new = corr * l + p.sum(-1)
+    acc_new = acc * corr[..., None] + jnp.einsum("bqhs,bshd->bqhd", p, vv)
+    return m_new, l_new, acc_new
+
+
+def _pallas_step(spec: RingSpec, t, i, q, k, v, m, l, acc):
+    """One ring step through the Pallas flash kernel (carry mode).
+
+    The kernel's mask offsets are static, so the traced chunk offset is
+    folded into the *relative* shift ``q_offset = rel·chunk`` with
+    ``rel ∈ {t, t - P}`` selected by ``lax.cond(i >= t)``."""
+    from repro.kernels.flash_attention import flash_attention
+    Sk = k.shape[1]
+    carry = (m[..., None], l[..., None], acc)
+
+    def run(rel):
+        st = flash_attention(q, k, v, causal=spec.causal, window=spec.window,
+                             softcap=spec.softcap, q_offset=rel * Sk,
+                             carry=carry, return_carry=True,
+                             block_q=spec.block_q, block_k=spec.block_k)
+        return st
+
+    if spec.n_shards == 1 or t == 0:
+        m4, l4, acc4 = run(0)
+    elif spec.causal:
+        # wrapped chunks are entirely in the future: carry passes through
+        m4, l4, acc4 = jax.lax.cond(i >= t, lambda: run(t), lambda: carry)
+    else:
+        m4, l4, acc4 = jax.lax.cond(i >= t, lambda: run(t),
+                                    lambda: run(t - spec.n_shards))
+    return m4[..., 0], l4[..., 0], acc4
+
+
+# ---------------------------------------------------------------------------
+# the ring schedule (per-shard bodies; custom_vjp boundary)
+
+def _axis_index(spec: RingSpec):
+    return jax.lax.axis_index(spec.axis) if spec.n_shards > 1 else 0
+
+
+def _ring_fwd(spec: RingSpec, q, k, v):
+    """Forward ring. Returns (out, lse) — out normalized, q.dtype."""
+    P_ = spec.n_shards
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    i = _axis_index(spec)
+    q_off = i * Sq
+    q32 = q.astype(jnp.float32)
+    m = jnp.full((B, Sq, H), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Sq, H), jnp.float32)
+    acc = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    steps = contributing_steps(P_, Sk, causal=spec.causal,
+                               window=spec.window)
+    n_rot = max(steps)
+    perm = [(j, (j + 1) % P_) for j in range(P_)]
+    k_cur, v_cur = k, v
+    for t in range(n_rot + 1):
+        if t in steps:
+            if spec.inner == "pallas":
+                m, l, acc = _pallas_step(spec, t, i, q, k_cur, v_cur,
+                                         m, l, acc)
+            else:
+                src = jnp.mod(i - t, P_) if P_ > 1 else 0
+                m, l, acc = _jnp_step(spec, q32, k_cur, v_cur, m, l, acc,
+                                      q_off, src * Sk)
+        if t < n_rot:
+            # next chunk's permute is independent of this step's compute:
+            # XLA's latency-hiding scheduler overlaps them
+            k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
+            v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
+    safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / safe[..., None]).astype(q.dtype)
+    lse = jnp.where(l == 0.0, NEG_INF, m + jnp.log(safe))
+    return out, lse
+
+
+def _bwd_block(spec: RingSpec, q32, do32, k, v, lse, delta, q_off, kv_off):
+    """Gradient contributions of one (q-shard, kv-chunk) block.
+
+    Recomputes probs from the saved lse (flash backward), returns
+    (dq_partial, dk_chunk, dv_chunk) in f32; dk/dv folded to KV heads."""
+    B, Sq, H, hd = q32.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    kk = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bshd->bqhs", q32, kk) * scale
+    if spec.softcap is not None:
+        th = jnp.tanh(s / spec.softcap)
+        s_cap = th * spec.softcap
+    else:
+        th, s_cap = None, s
+    msk = _mask(Sq, Sk, q_off, kv_off, spec.causal, spec.window)
+    p = jnp.where(msk[None, :, None, :], jnp.exp(s_cap - lse[..., None]), 0.0)
+    dv_h = jnp.einsum("bqhs,bqhd->bshd", p, do32)
+    dp = jnp.einsum("bqhd,bshd->bqhs", do32, vv)
+    ds = p * (dp - delta[..., None])
+    if th is not None:                      # d/ds [c·tanh(s/c)] = 1 - tanh²
+        ds = ds * (1.0 - th * th)
+    dq = jnp.einsum("bqhs,bshd->bqhd", ds, kk) * scale
+    dk_h = jnp.einsum("bqhs,bqhd->bshd", ds, q32) * scale
+    dk = dk_h.reshape(B, Sk, K, G, hd).sum(3)
+    dv = dv_h.reshape(B, Sk, K, G, hd).sum(3)
+    return dq, dk, dv
+
+
+def _ring_bwd_impl(spec: RingSpec, q, k, v, out, lse, do):
+    """Reverse-direction ring: (k, v, dk, dv) rotate together for the full
+    P hops so each chunk's gradient lands back on its home device."""
+    P_ = spec.n_shards
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    i = _axis_index(spec)
+    q_off = i * Sq
+    q32 = q.astype(jnp.float32)
+    do32 = do.astype(jnp.float32)
+    delta = jnp.sum(do32 * out.astype(jnp.float32), axis=-1)   # (B, Sq, H)
+    dq = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dk = jnp.zeros_like(k, dtype=jnp.float32)
+    dv = jnp.zeros_like(v, dtype=jnp.float32)
+    steps = contributing_steps(P_, Sk, causal=spec.causal,
+                               window=spec.window, direction="bwd")
+    perm = [(j, (j - 1) % P_) for j in range(P_)]
+    k_cur, v_cur = k, v
+    for t in range(P_):
+        if t in steps:
+            src = jnp.mod(i + t, P_) if P_ > 1 else 0
+            dq_c, dk_c, dv_c = _bwd_block(spec, q32, do32, k_cur, v_cur,
+                                          lse, delta, q_off, src * Sk)
+            dq = dq + dq_c
+            dk = dk + dk_c
+            dv = dv + dv_c
+        if P_ > 1:
+            if t < P_ - 1:      # k/v are dead after the last compute step
+                k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
+                v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
+            # dk/dv always complete the full cycle back to their home shard
+            dk = jax.lax.ppermute(dk, spec.axis, perm)
+            dv = jax.lax.ppermute(dv, spec.axis, perm)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ring_shard(spec: RingSpec, q, k, v):
+    out, _ = _ring_fwd(spec, q, k, v)
+    return out
+
+
+def _ring_shard_fwd(spec, q, k, v):
+    out, lse = _ring_fwd(spec, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _ring_shard_bwd(spec, res, do):
+    q, k, v, out, lse = res
+    return _ring_bwd_impl(spec, q, k, v, out, lse, do)
+
+
+_ring_shard.defvjp(_ring_shard_fwd, _ring_shard_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+
+def ring_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                   axis="model", inner="jnp", block_q=128, block_k=128,
+                   mesh=None):
+    """Sequence-sharded exact GQA attention over the ``axis`` ring.
+
+    q: (B, S, H, hd); k/v: (B, S, K, hd) with H % K == 0 — *global*
+    shapes; internally the S dim is shard_mapped over ``axis`` and the
+    batch dim over the data axes.  Numerically equals the dense/flash
+    path (same online softmax, f32 accumulation); differentiable via the
+    reverse-ring ``custom_vjp``.
+
+    Without an ambient mesh (or with a 1-sized / absent ``axis``) the
+    schedule degenerates to a single local block step — the CPU smoke
+    path, and also the backward-math oracle the mesh tests compare
+    against.  ``inner="pallas"`` runs the flash kernel per step (TPU).
+    """
+    B, Sq, H, hd = q.shape
+    if k.shape[1] != Sq:
+        raise ValueError(
+            f"ring attention is self-attention: q and k/v must carry the "
+            f"same sequence length, got Sq={Sq}, Sk={k.shape[1]}")
+    mesh = mesh or compat.current_mesh()
+    n = int(mesh.shape[axis]) if (mesh is not None
+                                  and axis in mesh.axis_names) else 1
+    if n > 1 and Sq % n != 0:
+        raise ValueError(
+            f"sequence length {Sq} not divisible by ring axis "
+            f"{axis!r}={n}; pad the batch or drop PerfFlags.seq_shard")
+    spec = RingSpec(n_shards=n, axis=axis, causal=causal, window=window,
+                    softcap=softcap, inner=inner, block_q=block_q,
+                    block_k=block_k)
+    if n == 1:
+        return _ring_shard(spec, q, k, v)
+    names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
+    qspec = _resolve((BATCH, axis, None, None), q.shape, names, sizes)
+    kvspec = _resolve((BATCH, axis, None, None), k.shape, names, sizes)
+    f = compat.shard_map(partial(_ring_shard, spec), mesh,
+                         in_specs=(qspec, kvspec, kvspec), out_specs=qspec)
+    return f(q, k, v)

@@ -15,8 +15,8 @@ from .fused_update import sgd_momentum as _sgd
 from .rmsnorm import rmsnorm as _rmsnorm
 
 flash_attention = jax.jit(_flash, static_argnames=(
-    "causal", "window", "softcap", "q_offset", "kv_len", "block_q",
-    "block_k", "interpret"))
+    "causal", "window", "softcap", "q_offset", "kv_offset", "kv_len",
+    "return_carry", "block_q", "block_k", "interpret"))
 
 rmsnorm = jax.jit(_rmsnorm, static_argnames=("eps", "block_rows",
                                              "interpret"))

@@ -119,11 +119,16 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def _step_and_specs(cfg, shape_name, mesh):
     """Build (step_fn, kwargs specs, in_shardings, donate) for a shape."""
+    from repro.perf_flags import FLAGS
     shp = INPUT_SHAPES[shape_name]
     specs = input_specs(cfg, shape_name)
+    # sequence sharding: full-sequence batches enter S-sharded over "model"
+    # (DESIGN.md §8) so the ring path never gathers the sequence
+    bkind = ("seq" if FLAGS.seq_shard and shp.kind in ("train", "prefill")
+             else shp.kind)
     p_sh = make_shardings(mesh, param_pspecs(cfg, specs["params"], mesh))
     b_sh = make_shardings(mesh, batch_pspecs(cfg, specs["batch"], mesh,
-                                             shp.kind))
+                                             bkind))
     repl = NamedSharding(mesh, P())
     if shp.kind == "train":
         step = make_train_step(cfg)
@@ -214,20 +219,27 @@ def probe_cfg(cfg, n_super):
 
 
 def run_pair(arch: str, shape_name: str, multi_pod: bool,
-             probes: bool = True, verbose: bool = True) -> dict:
-    long_ctx = shape_name == "long_500k"
-    if long_ctx and arch not in LONG_CONTEXT_ARCHS:
+             probes: bool = True, verbose: bool = True,
+             seq_shard: bool = False) -> dict:
+    long_ctx = shape_name.startswith("long_500k")
+    if long_ctx and arch not in LONG_CONTEXT_ARCHS and not seq_shard:
         return {"arch": arch, "shape": shape_name, "status": "SKIP",
                 "reason": "pure full-attention arch; long_500k requires "
-                          "sub-quadratic attention (DESIGN.md §5)"}
-    cfg = get_config(arch, long_context=long_ctx)
+                          "sub-quadratic attention (DESIGN.md §5) or the "
+                          "sequence-sharded ring path (--seq-shard, §8)"}
+    cfg = get_config(arch, long_context=long_ctx, seq_shard=seq_shard)
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "n_layers": cfg.n_layers, "n_super": cfg.n_super,
            "params": cfg.param_count(),
            "params_active": cfg.param_count(active_only=True),
+           "seq_shard": seq_shard,
            "status": "OK"}
+    from repro.perf_flags import FLAGS, set_flags
+    prev_flags = (FLAGS.seq_shard, FLAGS.attn_impl)
+    if seq_shard:
+        set_flags(seq_shard=True, attn_impl="auto")
     try:
         lowered, compiled, t_l, t_c = lower_and_compile(cfg, shape_name, mesh)
         rec["full"] = analyze(compiled)
@@ -252,12 +264,16 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         rec["error"] = f"{type(e).__name__}: {e}"[:2000]
         if verbose:
             print(f"  [{mesh_name}] FAILED: {rec['error'][:200]}")
+    finally:
+        # restore only what we set — callers may hold other tuned flags
+        set_flags(seq_shard=prev_flags[0], attn_impl=prev_flags[1])
     return rec
 
 
 def save(rec: dict):
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    name = f"{rec['arch']}__{rec['shape']}__{rec.get('mesh', 'skip')}.json"
+    ring = "__ring" if rec.get("seq_shard") else ""
+    name = f"{rec['arch']}__{rec['shape']}__{rec.get('mesh', 'skip')}{ring}.json"
     (OUT_DIR / name).write_text(json.dumps(rec, indent=1))
 
 
@@ -269,6 +285,10 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
     ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-sharded batches + ring attention "
+                         "(PerfFlags.seq_shard; unlocks long_500k for "
+                         "full-attention archs — DESIGN.md §8)")
     ap.add_argument("--force", action="store_true",
                     help="recompute even if a result JSON exists")
     args = ap.parse_args()
@@ -279,17 +299,23 @@ def main():
               "both": [False, True]}[args.mesh]
 
     failures = 0
+    ring = "__ring" if args.seq_shard else ""
     for arch, shape in pairs:
         for mp in meshes:
             mesh_name = "2x16x16" if mp else "16x16"
-            out = OUT_DIR / f"{arch}__{shape}__{mesh_name}.json"
+            out = OUT_DIR / f"{arch}__{shape}__{mesh_name}{ring}.json"
             skip_name = OUT_DIR / f"{arch}__{shape}__skip.json"
-            if not args.force and (out.exists() or skip_name.exists()):
+            # a stale default-run skip (full attention × long_500k) must
+            # not block the --seq-shard run that exists to unlock the pair
+            skipped = skip_name.exists() and not args.seq_shard
+            if not args.force and (out.exists() or skipped):
                 continue
-            print(f"== {arch} × {shape} × {mesh_name}")
+            print(f"== {arch} × {shape} × {mesh_name}"
+                  + (" (seq-shard/ring)" if args.seq_shard else ""))
             # probes only needed on the single-pod mesh (roofline table)
             rec = run_pair(arch, shape, mp,
-                           probes=(not args.no_probes) and not mp)
+                           probes=(not args.no_probes) and not mp,
+                           seq_shard=args.seq_shard)
             save(rec)
             failures += rec["status"] == "FAIL"
             if rec["status"] == "SKIP":

@@ -24,7 +24,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-sharded prefill: S over 'model', ring "
+                         "attention for full layers (DESIGN.md §8)")
+    ap.add_argument("--attn-impl", choices=["auto", "dense", "ring"],
+                    default="auto",
+                    help="attention implementation selection "
+                         "(PerfFlags.attn_impl)")
     args = ap.parse_args()
+
+    if args.seq_shard or args.attn_impl != "auto":
+        from repro.perf_flags import set_flags
+        set_flags(seq_shard=args.seq_shard, attn_impl=args.attn_impl)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -38,7 +38,19 @@ def main():
                          "(DESIGN.md §7); numerically identical")
     ap.add_argument("--bucket-mb", type=float, default=4.0,
                     help="bucket byte cap in MiB for --overlap")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-sharded batches: S stays sharded over "
+                         "'model' and attention runs the ring schedule "
+                         "(DESIGN.md §8); numerically identical")
+    ap.add_argument("--attn-impl", choices=["auto", "dense", "ring"],
+                    default="auto",
+                    help="attention implementation selection "
+                         "(PerfFlags.attn_impl)")
     args = ap.parse_args()
+
+    if args.seq_shard or args.attn_impl != "auto":
+        from repro.perf_flags import set_flags
+        set_flags(seq_shard=args.seq_shard, attn_impl=args.attn_impl)
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -147,6 +147,11 @@ INPUT_SHAPES = {
     "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
     "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+    # the full-sequence long-context shape (DESIGN.md §8): quadratic
+    # attention cannot fit it per device — it exists for the
+    # sequence-sharded ring path (PerfFlags.seq_shard, dist/ring.py)
+    "long_500k_prefill": InputShape("long_500k_prefill", 524_288, 1,
+                                    "prefill"),
 }
 
 

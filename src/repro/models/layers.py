@@ -78,6 +78,27 @@ def _softcap(scores, cap):
 ATTN_Q_CHUNK = 1024
 
 
+def ring_selected(Sq: int) -> bool:
+    """Should this full-sequence attention run on the ring schedule?
+
+    ``PerfFlags.attn_impl``: "ring" forces it (degrades to one local block
+    step without a mesh), "dense" forbids it, "auto" rings exactly when
+    sequence sharding is on and the ambient mesh's "model" axis divides S
+    (DESIGN.md §8).
+    """
+    from repro.perf_flags import FLAGS
+    if FLAGS.attn_impl == "dense":
+        return False
+    if FLAGS.attn_impl == "ring":
+        return True
+    if not FLAGS.seq_shard:
+        return False
+    from repro.dist.compat import current_mesh
+    mesh = current_mesh()
+    n = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    return n > 1 and Sq % n == 0
+
+
 def gqa_attention(q, k, v, *, causal=True, window=None, softcap=None,
                   q_offset=0):
     """Grouped-query attention.
@@ -241,11 +262,21 @@ def attn_project_qkv(p, x, cfg):
         q = q + p["bq"]
         k = k + p["bk"]
         v = v + p["bv"]
-    # megatron: batch over data axes, heads over model (ann drops an axis
-    # when the dim is not divisible, e.g. kv=8 heads on a 16-way model axis)
-    q = ann(q, BATCH, None, "model", None)
-    k = ann(k, BATCH, None, "model", None)
-    v = ann(v, BATCH, None, "model", None)
+    from repro.perf_flags import FLAGS
+    if FLAGS.seq_shard:
+        # sequence sharding (DESIGN.md §8): q/k/v stay S-sharded over
+        # "model" — GQA's small K never has to divide the model axis, and
+        # the ring schedule consumes exactly this layout
+        q = ann(q, BATCH, "model", None, None)
+        k = ann(k, BATCH, "model", None, None)
+        v = ann(v, BATCH, "model", None, None)
+    else:
+        # megatron: batch over data axes, heads over model (ann drops an
+        # axis when the dim is not divisible, e.g. kv=8 heads on a 16-way
+        # model axis)
+        q = ann(q, BATCH, None, "model", None)
+        k = ann(k, BATCH, None, "model", None)
+        v = ann(v, BATCH, None, "model", None)
     return q, k, v
 
 
@@ -261,12 +292,23 @@ def attn_block(p, x, cfg, spec, positions=None, rope=True):
         cos, sin = rope_freqs(pos, cfg.hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
-    out = gqa_attention(q, k, v, causal=(spec.attn != "bidir"),
-                        window=spec.window, softcap=cfg.attn_softcap)
-    out = ann(out, BATCH, None, "model", None)
+    causal = spec.attn != "bidir"
+    if causal and S > 1 and ring_selected(S):
+        # sequence-sharded ring schedule (DESIGN.md §8): S stays sharded
+        # over "model" end to end; per-device attention state is O(S·S/P)
+        from repro.dist.ring import ring_attention
+        out = ring_attention(q, k, v, causal=True, window=spec.window,
+                             softcap=cfg.attn_softcap,
+                             inner="pallas" if _USE_PALLAS else "jnp")
+        out = ann(out, BATCH, "model", None, None)
+    else:
+        out = gqa_attention(q, k, v, causal=causal,
+                            window=spec.window, softcap=cfg.attn_softcap)
+        out = ann(out, BATCH, None, "model", None)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     # sequence-parallel output: the heads-contraction all-reduce becomes a
-    # reduce-scatter over S
+    # reduce-scatter over S (a no-op re-pin on the ring path, which is
+    # already S-sharded)
     return ann(out, BATCH, "model", None), (k, v)
 
 

@@ -156,9 +156,11 @@ def apply_block(p, x, cfg: ArchConfig, spec: LayerSpec, enc_kv=None,
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
         from repro.perf_flags import FLAGS
-        if FLAGS.attn_gather_once:
+        if FLAGS.attn_gather_once and not FLAGS.seq_shard:
             # §Perf: one explicit bf16 gather of the sequence-parallel
-            # stream before the three qkv einsums (not three, never f32)
+            # stream before the three qkv einsums (not three, never f32).
+            # Under seq_shard the stream must *stay* S-sharded (the ring
+            # path never gathers S), so the flag is a no-op there.
             h = ann(h, BATCH, None, None)
         h, kv = attn_block(p["attn"], h, cfg, spec, positions=positions)
         cache = {"k": kv[0], "v": kv[1]}

@@ -50,6 +50,15 @@ class PerfFlags:
     # "involuntary full rematerialization" (replicating per-chunk probs)
     # when GQA's (K,G) split defeats head sharding
     attn_probs_seq_shard: bool = False
+    # sequence sharding (DESIGN.md §8): keep q/k/v S-sharded over "model"
+    # through the attention block instead of gathering S / sharding heads —
+    # the long-context layout whose attention runs on the ring schedule.
+    # Batches enter S-sharded via batch_pspecs(kind="seq").
+    seq_shard: bool = False
+    # attention implementation: "auto" rings causal/window layers when
+    # seq_shard is on and the mesh's "model" axis divides S; "ring" forces
+    # the ring schedule (dist/ring.py); "dense" never rings
+    attn_impl: str = "auto"
 
 
 FLAGS = PerfFlags()

@@ -155,3 +155,26 @@ def test_random_dag_all_strategies_agree(prog):
             np.testing.assert_allclose(results[strat][1][k], base[1][k],
                                        rtol=1e-4, atol=1e-5,
                                        err_msg=f"{strat}:{k}")
+
+
+# ---------------------------------------------------------------------------
+# nbytes dtype table (ISSUE 3 satellite: no silent 4-byte fallback)
+
+def test_nbytes_known_dtypes_including_narrow():
+    from repro.core.memplan import nbytes
+    assert nbytes((4,), "float32") == 16
+    assert nbytes((4,), "bfloat16") == 8
+    assert nbytes((4,), "int16") == 8
+    assert nbytes((4,), "uint32") == 16
+    assert nbytes((4,), "float8_e4m3fn") == 4
+    assert nbytes((4,), "float8_e5m2") == 4
+    assert nbytes((2, 3), np.dtype("uint16")) == 12
+    assert nbytes((), "float64") == 8
+
+
+def test_nbytes_unknown_dtype_raises_naming_it():
+    from repro.core.memplan import nbytes
+    with pytest.raises(ValueError, match="complex64"):
+        nbytes((2, 3), "complex64")
+    with pytest.raises(ValueError, match="unknown dtype"):
+        nbytes((1,), np.dtype("complex128"))

@@ -92,6 +92,92 @@ def test_flash_attention_decode_offset():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("window", [None, 32])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+@pytest.mark.parametrize("group", [1, 2, 4])
+def test_flash_attention_matrix(causal, window, softcap, group):
+    """Full causal × sliding-window × softcap × GQA-group matrix vs the
+    jnp oracle (interpret mode) — ISSUE-3 satellite coverage."""
+    if window is not None and not causal:
+        pytest.skip("windowed layers are causal in every config")
+    B, S, K, hd = 1, 128, 2, 32
+    H = K * group
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * 2
+    k = jax.random.normal(ks[1], (B, S, K, hd)) * 2
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# carry mode: the per-ring-step contract (DESIGN.md §8)
+
+def test_flash_attention_carry_chain_matches_full():
+    """Chaining per-chunk passes through (m, l, acc) + kv_offset equals
+    one full pass — the invariant dist/ring.py is built on."""
+    from repro.kernels.flash_attention import flash_carry_finalize
+    B, S, H, K, hd = 2, 192, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    for kw in (dict(causal=True), dict(causal=True, window=80),
+               dict(causal=True, softcap=25.0), dict(causal=False)):
+        want = ref.flash_attention_ref(q, k, v, **kw)
+        st = None
+        for c0 in range(0, S, 64):
+            st = flash_attention(q, k[:, c0:c0 + 64], v[:, c0:c0 + 64],
+                                 carry=st, kv_offset=c0, return_carry=True,
+                                 block_q=32, block_k=32, **kw)
+        out, lse = flash_carry_finalize(st, q.dtype)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=3e-5, atol=3e-5)
+        assert lse.shape == (B, S, H)
+        assert np.isfinite(np.asarray(lse)).all()
+
+
+def test_flash_attention_neutral_carry_is_identity():
+    """Seeding with the neutral (−inf, 0, 0) state changes nothing."""
+    from repro.kernels.flash_attention import (flash_carry_finalize,
+                                               flash_carry_init)
+    B, S, H, K, hd = 1, 64, 2, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    base = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    st = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                         carry=flash_carry_init(B, S, H, hd),
+                         return_carry=True)
+    out, _ = flash_carry_finalize(st, q.dtype)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_flash_carry_lse_matches_logsumexp():
+    from repro.kernels.flash_attention import flash_carry_finalize
+    B, S, H, K, hd = 1, 96, 2, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    st = flash_attention(q, k, v, causal=True, return_carry=True,
+                         block_q=32, block_k=32)
+    _, lse = flash_carry_finalize(st)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   jnp.repeat(k, 1, 2).astype(jnp.float32)) / np.sqrt(hd)
+    s = jnp.where(jnp.tril(jnp.ones((S, S), bool))[None, None], s, -1e30)
+    want = jax.scipy.special.logsumexp(s, axis=-1).transpose(0, 2, 1)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_flash_attention_kv_len_masking():
     """Padded cache: keys beyond kv_len are invisible."""
     B, S, H, K, hd = 1, 64, 2, 2, 32
