@@ -51,7 +51,7 @@ def main() -> None:
 
     from benchmarks import (bench_dist, bench_engine, bench_kernels,
                             bench_memory, bench_raw_perf, bench_ring,
-                            bench_scalability)
+                            bench_scalability, bench_serving)
 
     print("## Fig.6 raw performance (executor vs hand-jit vs eager)")
     rows = bench_raw_perf.run()
@@ -72,6 +72,10 @@ def main() -> None:
     print("\n## §8 ring attention (sequence-sharded long context)")
     rows = bench_ring.run()
     record("ring", rows, bench_ring.validate(rows))
+
+    print("\n## §9 serving: paged KV-cache + continuous batching vs static")
+    rows = bench_serving.run()
+    record("serving", rows, bench_serving.validate(rows))
 
     print("\n## Dependency engine")
     rows = bench_engine.run()

@@ -209,6 +209,63 @@ def plan_graph(graph: Graph, shapes: dict, dtypes: dict,
     return plan_schedule(units, ext, strategy=strategy)
 
 
+# ---------------------------------------------------------------------------
+# KV/SSM decode-cache byte models (serving).  The §3.1 lifetime argument
+# applied to the serving cache: a dense engine allocates every sequence its
+# worst-case ``max_len`` rectangle; a paged cache only keeps blocks whose
+# lifetime has actually started (positions < the sequence's live length).
+
+
+def _cache_row_bytes(cfg) -> tuple[int, int]:
+    """(bytes per cached token across all attn layers, fixed per-seq SSM
+    state bytes).  ``cfg`` is an ``ArchConfig`` duck-type: only pattern /
+    n_super / head dims / ssm dims / dtype are read."""
+    act = 2 if cfg.dtype == "bfloat16" else 4
+    per_tok = 0
+    fixed = 0
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            per_tok += cfg.n_super * 2 * cfg.n_kv_heads * cfg.hd * act
+        else:
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            fixed += cfg.n_super * ((cfg.conv_width - 1) * ch * act
+                                    + cfg.ssm_heads * cfg.ssm_p
+                                    * cfg.ssm_state * 4)
+    return per_tok, fixed
+
+
+def kv_cache_bytes_dense(cfg, batch: int, max_len: int) -> int:
+    """Dense engine footprint: every sequence padded to ``max_len``
+    (windowed layers ring-buffered to ``min(window, max_len)``)."""
+    act = 2 if cfg.dtype == "bfloat16" else 4
+    total = 0
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            S = max_len if spec.window is None else min(spec.window, max_len)
+            total += cfg.n_super * batch * S * 2 * cfg.n_kv_heads * cfg.hd * act
+        else:
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            total += cfg.n_super * batch * (
+                (cfg.conv_width - 1) * ch * act
+                + cfg.ssm_heads * cfg.ssm_p * cfg.ssm_state * 4)
+    return total
+
+
+def kv_cache_bytes_paged(cfg, lengths, block_size: int) -> dict:
+    """Paged footprint for live per-sequence ``lengths`` (an iterable of
+    token counts): blocks actually backed, block-granularity rounding
+    included, plus the per-slot SSM state.  Returns ``{"bytes", "blocks",
+    "block_bytes"}`` — ``block_bytes`` is the size of ONE block across all
+    attention layers (the unit the allocator's ``peak_in_use`` counts)."""
+    per_tok, fixed = _cache_row_bytes(cfg)
+    lengths = [int(L) for L in lengths]
+    block_bytes = per_tok * block_size
+    blocks = sum(-(-L // block_size) for L in lengths if L > 0)
+    return {"bytes": blocks * block_bytes + len(lengths) * fixed,
+            "blocks": blocks,
+            "block_bytes": block_bytes}
+
+
 def naive_bytes(graph: Graph, shapes, dtypes) -> int:
     """Sum of all internal node outputs with no sharing (the Fig. 7 baseline)."""
     ext = {(n.uid, 0) for n in graph.variables}

@@ -12,11 +12,15 @@ import jax
 
 from .flash_attention import flash_attention as _flash
 from .fused_update import sgd_momentum as _sgd
+from .paged_attention import paged_attention as _paged
 from .rmsnorm import rmsnorm as _rmsnorm
 
 flash_attention = jax.jit(_flash, static_argnames=(
     "causal", "window", "softcap", "q_offset", "kv_offset", "kv_len",
     "return_carry", "block_q", "block_k", "interpret"))
+
+paged_attention = jax.jit(_paged, static_argnames=(
+    "window", "softcap", "interpret"))
 
 rmsnorm = jax.jit(_rmsnorm, static_argnames=("eps", "block_rows",
                                              "interpret"))

@@ -1,0 +1,153 @@
+"""Paged decode attention as a Pallas TPU kernel.
+
+One query row per sequence against a block-table-indirected KV pool
+(continuous-batching decode, DESIGN.md §9).  Where the flash kernel
+streams *contiguous* k-blocks, this kernel streams *logical pages*: the
+grid's last axis walks a sequence's block table and the k/v BlockSpec
+``index_map`` reads the physical block id out of a scalar-prefetched
+table — the DMA engine gathers through the indirection, the MXU only
+ever sees dense (block_size, head_dim) tiles.
+
+Design notes (TPU-native, mirrors ``flash_attention.py``):
+
+* grid = (B, K, n_pages); n_pages is "arbitrary" (sequential) so the
+  online-softmax carry (m, l, acc) lives in VMEM scratch across pages;
+* scalar prefetch: ``block_tables (B, n_pages)`` and ``lengths (B,)``
+  ride ahead of the grid so index_maps can compute DMA source blocks
+  (``pltpu.PrefetchScalarGridSpec``);
+* GQA: the kernel processes one KV head per grid step with all its G
+  query heads as the q tile (G, hd) — no repeated-KV materialization;
+* pages past a sequence's live length are skipped (``pl.when``), so a
+  short sequence in a long-table batch costs only its own pages of MXU
+  work (the DMA for the skipped block still lands — sink pages make it
+  harmless);
+* sliding-window layers mask ``kpos > qpos - window`` with qpos =
+  length-1 (the paged pool is position-ordered, no ring buffer);
+* accumulation in f32, output cast to the query dtype.
+
+The online-softmax recurrence is shared with ``flash_attention.py``
+(PR 3's carry form); only the page indirection differs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells it TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, block_size, n_pages,
+                  window, softcap):
+    """One (b, kv_head, page) grid step."""
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lens_ref[b]                       # live tokens incl. current
+
+    @pl.when(pi * block_size < length)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+
+        kpos = (pi * block_size
+                + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1))
+        mask = kpos < length
+        if window is not None:
+            # the single query row sits at absolute position length-1
+            mask &= kpos > (length - 1) - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (G, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)         # fully-masked block: exp(0)=1
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _done():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                  # inactive lanes
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window=None, softcap=None, interpret=None):
+    """Single-token attention through a paged KV pool.
+
+    q: (B, H, hd) — the current token's query rows;
+    k_pages/v_pages: (num_blocks, block_size, K, hd) physical pools;
+    block_tables: (B, n_pages) int32, logical page -> physical block
+    (sink-filled past each sequence's pages);
+    lengths: (B,) int32 — live tokens per sequence INCLUDING the current
+    one (the row at position lengths-1 must already be written).
+
+    Returns (B, H, hd).  Lanes with length 0 return zeros.
+    """
+    B, H, hd = q.shape
+    NB, bs, K, _ = k_pages.shape
+    assert H % K == 0, (H, K)
+    G = H // K
+    n_pages = block_tables.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    qg = q.reshape(B, K, G, hd)
+    kernel = functools.partial(
+        _paged_kernel, scale=1.0 / math.sqrt(hd), block_size=bs,
+        n_pages=n_pages, window=window, softcap=softcap)
+
+    q_spec = pl.BlockSpec((1, 1, G, hd), lambda b, kh, pi, *_: (b, kh, 0, 0))
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, hd),
+        lambda b, kh, pi, tables, lens: (tables[b, pi], 0, kh, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, n_pages),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),     # running max m
+            pltpu.VMEM((G, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, H, hd)

@@ -31,6 +31,38 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
     return jnp.einsum("bhqs,bshd->bqhd", p, vv).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        window=None, softcap=None):
+    """q: (B, H, hd); pools: (NB, bs, K, hd); block_tables: (B, P) int32;
+    lengths: (B,) live tokens incl. the current one.  Gathers the logical
+    KV through the table, then masked dense attention in f32.  This is
+    also the CPU fast path the serving engine uses (interpret-mode Pallas
+    is per-grid-step Python)."""
+    B, H, hd = q.shape
+    NB, bs, K, _ = k_pages.shape
+    G = H // K
+    P = block_tables.shape[1]
+    # (B, P, bs, K, hd) -> (B, P*bs, K, hd): logical position order
+    k = k_pages[block_tables].reshape(B, P * bs, K, hd)
+    v = v_pages[block_tables].reshape(B, P * bs, K, hd)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(P * bs)
+    mask = kpos[None] < lengths[:, None]                  # (B, S)
+    if window is not None:
+        mask &= kpos[None] > (lengths[:, None] - 1) - window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * (mask[:, None, None])
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)                   # empty lane -> 0
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def rmsnorm_ref(x, weight, eps=1e-6):
     dt = x.dtype
     x32 = x.astype(jnp.float32)

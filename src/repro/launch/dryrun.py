@@ -236,6 +236,26 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
            "params_active": cfg.param_count(active_only=True),
            "seq_shard": seq_shard,
            "status": "OK"}
+    shp = INPUT_SHAPES[shape_name]
+    if shp.kind == "decode":
+        # true vs padded serving-cache footprint (DESIGN.md §9): the dense
+        # engine pays B x max_len rectangles; a paged cache pays only live
+        # blocks — reported at full occupancy and at the S/2 mean of a
+        # steady-state mixed-traffic batch
+        from repro.core.memplan import (kv_cache_bytes_dense,
+                                        kv_cache_bytes_paged)
+        bs = 16
+        B, S = shp.global_batch, shp.seq_len
+        dense = kv_cache_bytes_dense(cfg, B, S)
+        full = kv_cache_bytes_paged(cfg, [S] * B, bs)
+        half = kv_cache_bytes_paged(cfg, [S // 2] * B, bs)
+        rec["cache_footprint"] = {
+            "block_size": bs,
+            "dense_bytes": dense,
+            "paged_bytes_full": full["bytes"],
+            "paged_bytes_mixed_mean": half["bytes"],
+            "padded_over_true_mixed": round(dense / max(half["bytes"], 1), 2),
+        }
     from repro.perf_flags import FLAGS, set_flags
     prev_flags = (FLAGS.seq_shard, FLAGS.attn_impl)
     if seq_shard:

@@ -1,8 +1,10 @@
-"""Serving launcher: batched generation with the ServeEngine.
+"""Serving launcher: batched generation with the static or paged engine.
 
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --batch 4 --new-tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+      --paged --block-size 16 --max-batch 4 --mixed --batch 12
 """
 from __future__ import annotations
 
@@ -13,17 +15,33 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import get_model, reduced
-from repro.serve import ServeEngine
+from repro.serve import PagedServeEngine, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests (paged: queue size; static: "
+                         "one lockstep batch)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache + continuous batching "
+                         "(DESIGN.md §9)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged cache block size in tokens")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="decode lanes for the paged engine "
+                         "(default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt tokens prefilled per engine step (paged)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="draw per-request prompt lengths from "
+                         "[prompt_len/4, prompt_len] and uneven token "
+                         "budgets (the continuous-batching workload)")
     ap.add_argument("--seq-shard", action="store_true",
                     help="sequence-sharded prefill: S over 'model', ring "
                          "attention for full layers (DESIGN.md §8)")
@@ -42,12 +60,18 @@ def main():
         cfg = reduced(cfg)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params,
-                      max_len=args.prompt_len + args.new_tokens + 8)
+    max_len = args.prompt_len + args.new_tokens + 8
 
     rng = np.random.RandomState(0)
-    prompts = [list(rng.randint(1, cfg.vocab, args.prompt_len))
-               for _ in range(args.batch)]
+    if args.mixed:
+        lens = rng.randint(max(1, args.prompt_len // 4),
+                           args.prompt_len + 1, args.batch)
+        budgets = list(rng.randint(max(1, args.new_tokens // 4),
+                                   args.new_tokens + 1, args.batch))
+    else:
+        lens = [args.prompt_len] * args.batch
+        budgets = [args.new_tokens] * args.batch
+    prompts = [list(rng.randint(1, cfg.vocab, L)) for L in lens]
     extra = {}
     if cfg.encoder_layers:
         extra["frames"] = np.asarray(rng.randn(
@@ -55,12 +79,27 @@ def main():
     elif cfg.frontend_tokens:
         extra["patches"] = np.asarray(rng.randn(
             args.batch, cfg.frontend_tokens, cfg.frontend_dim), np.float32)
-    toks, stats = eng.generate(prompts, max_new_tokens=args.new_tokens,
-                               temperature=args.temperature,
-                               extra_inputs=extra)
-    print("generated:", toks.shape)
-    print(f"prefill {stats.prefill_s:.3f}s decode {stats.decode_s:.3f}s "
-          f"({stats.tok_per_s:.1f} tok/s)")
+
+    if args.paged:
+        eng = PagedServeEngine(cfg, params, block_size=args.block_size,
+                               max_batch=args.max_batch or args.batch,
+                               max_len=max_len,
+                               prefill_chunk=args.prefill_chunk)
+        outs, stats = eng.generate(prompts, max_new_tokens=budgets,
+                                   temperature=args.temperature)
+        print(f"generated: {len(outs)} requests, "
+              f"{sum(len(o) for o in outs)} tokens, "
+              f"peak cache blocks {stats.peak_cache_blocks} "
+              f"({stats.peak_cache_bytes / 2**20:.2f} MiB)")
+    else:
+        eng = ServeEngine(cfg, params, max_len=max_len)
+        toks, stats = eng.generate(prompts,
+                                   max_new_tokens=max(budgets),
+                                   temperature=args.temperature,
+                                   extra_inputs=extra)
+        print("generated:", toks.shape)
+    print(f"compile {stats.compile_s:.3f}s prefill {stats.prefill_s:.3f}s "
+          f"decode {stats.decode_s:.3f}s ({stats.tok_per_s:.1f} tok/s)")
 
 
 if __name__ == "__main__":

@@ -228,8 +228,9 @@ def _attention_dense(q, k, v, *, causal, window, softcap, q_offset):
 def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None):
     """One-token attention against a (possibly ring-buffered) KV cache.
 
-    q: (B, 1, H, hd); caches: (B, S, K, hd); cache_len: filled length
-    (static or traced int). Positions >= cache_len are masked out.
+    q: (B, 1, H, hd); caches: (B, S, K, hd); cache_len: filled length —
+    a scalar (lockstep batch) or a (B,) vector (per-sequence lengths,
+    mixed-length serving). Positions >= cache_len are masked out.
     S is a pure contraction dim — shard it and GSPMD emits the
     flash-decoding distributed softmax.
     """
@@ -242,11 +243,62 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None):
                         k_cache.astype(jnp.float32)) * scale
     scores = _softcap(scores, softcap)
     kpos = jnp.arange(S)
-    valid = kpos < cache_len
-    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    # (1, S) or (B, S) valid map, broadcast over the (K, G) head dims
+    valid = kpos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window=None, softcap=None):
+    """One-token attention through the paged pool (DESIGN.md §9).
+
+    q: (B, H, hd); pools: (NB, bs, K, hd); block_tables: (B, P);
+    lengths: (B,) live tokens including the current one.  Routes to the
+    Pallas paged kernel on TPU; on CPU the gather-based oracle is the
+    fast path (interpret-mode Pallas runs the grid in Python).
+    """
+    if _USE_PALLAS:
+        from repro.kernels.ops import paged_attention
+        return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               window=window, softcap=softcap)
+    from repro.kernels.ref import paged_attention_ref
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               window=window, softcap=softcap)
+
+
+def paged_context_attention(q, k_ctx, v_ctx, *, q_offset, kv_len,
+                            window=None, softcap=None):
+    """Chunked-prefill attention against gathered paged context.
+
+    q: (B, C, H, hd) — the prompt chunk's queries; k_ctx/v_ctx:
+    (B, S_ctx, K, hd) in logical position order (the chunk's own rows
+    already written to the pool and gathered back); ``q_offset``:
+    absolute position of q[:, 0]; ``kv_len``: live tokens after this
+    chunk.  Both scalars or (B,) vectors.  Dense masked attention in
+    f32 — prefill is compute-bound, the paged kernel targets decode.
+    """
+    B, C, H, hd = q.shape
+    Sk, K = k_ctx.shape[1], k_ctx.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, C, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k_ctx.astype(jnp.float32)) * scale
+    scores = _softcap(scores, softcap)
+    qpos = (jnp.asarray(q_offset).reshape(-1, 1)
+            + jnp.arange(C)[None])                     # (B or 1, C)
+    kpos = jnp.arange(Sk)
+    mask = kpos[None, None] <= qpos[..., None]         # causal
+    mask &= kpos[None, None] < jnp.asarray(kv_len).reshape(-1, 1, 1)
+    if window is not None:
+        mask &= kpos[None, None] > qpos[..., None] - window
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_ctx.astype(jnp.float32))
+    return out.reshape(B, C, H, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -314,17 +366,33 @@ def attn_block(p, x, cfg, spec, positions=None, rope=True):
 
 def attn_block_decode(p, x, cache_k, cache_v, pos, cfg, spec):
     """Single-token decode step. x: (B, 1, D); caches: (B, S, K, hd);
-    pos: scalar absolute position. Returns (out, new_k_cache, new_v_cache).
+    pos: absolute position — scalar (lockstep batch) or (B,) vector
+    (per-sequence lengths). Returns (out, new_k_cache, new_v_cache).
     For windowed layers the cache is a ring buffer of size ``window``."""
     q, k, v = attn_project_qkv(p, x, cfg)
-    cos, sin = rope_freqs(jnp.asarray(pos)[None], cfg.hd, cfg.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
-    S = cache_k.shape[1]
-    slot = jnp.asarray(pos) % S  # ring for windowed caches; identity else
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
-    cache_len = jnp.minimum(jnp.asarray(pos) + 1, S)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        cos, sin = rope_freqs(pos[None], cfg.hd, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]          # (1, 1, hd//2), broadcast B
+    else:
+        cos, sin = rope_freqs(pos[:, None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    B, S, K, hd = cache_k.shape
+    slot = pos % S  # ring for windowed caches; identity else
+    if pos.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot,
+                                                      axis=1)
+    else:
+        # per-sequence write slots: one scatter over the flattened (B, S)
+        idx = jnp.arange(B) * S + slot
+        cache_k = cache_k.reshape(B * S, K, hd).at[idx].set(
+            k[:, 0]).reshape(B, S, K, hd)
+        cache_v = cache_v.reshape(B * S, K, hd).at[idx].set(
+            v[:, 0]).reshape(B, S, K, hd)
+    cache_len = jnp.minimum(pos + 1, S)
     # NOTE: windowing is enforced by ring-buffer SIZING (cache ring == window
     # for windowed layers), not by a position mask — ring slots are not in
     # position order.
@@ -332,6 +400,33 @@ def attn_block_decode(p, x, cache_k, cache_v, pos, cfg, spec):
                            softcap=cfg.attn_softcap)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return out, cache_k, cache_v
+
+
+def attn_block_decode_paged(p, x, k_pages, v_pages, block_tables, pos, cfg,
+                            spec):
+    """Single-token decode through the paged pool. x: (B, 1, D); pools:
+    (NB, bs, K, hd); block_tables: (B, P); pos: (B,) absolute position of
+    the incoming token.  Writes the token's k/v into its block-table slot,
+    then attends through the table.  Returns (out, new_k_pages,
+    new_v_pages).  Inactive lanes must carry sink tables (pos 0, table 0)
+    so their writes land in the sink block."""
+    q, k, v = attn_project_qkv(p, x, cfg)
+    cos, sin = rope_freqs(pos[:, None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    NB, bs, K, hd = k_pages.shape
+    B = q.shape[0]
+    page = block_tables[jnp.arange(B), pos // bs]        # physical block
+    idx = page * bs + pos % bs
+    k_pages = k_pages.reshape(NB * bs, K, hd).at[idx].set(
+        k[:, 0]).reshape(NB, bs, K, hd)
+    v_pages = v_pages.reshape(NB * bs, K, hd).at[idx].set(
+        v[:, 0]).reshape(NB, bs, K, hd)
+    out = paged_decode_attention(q[:, 0], k_pages, v_pages, block_tables,
+                                 pos + 1, window=spec.window,
+                                 softcap=cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out[:, None], p["wo"])
+    return out, k_pages, v_pages
 
 
 def cross_attn_block(p, x, enc_kv, cfg):

@@ -41,6 +41,23 @@ class Model:
     def cache_specs(self, batch: int, seq_len: int):
         return jax.eval_shape(lambda: T.make_cache(self.cfg, batch, seq_len))
 
+    # -- paged serving (DESIGN.md §9) ---------------------------------------
+    def make_paged_cache(self, num_blocks: int, block_size: int,
+                         max_batch: int):
+        return T.make_paged_cache(self.cfg, num_blocks, block_size,
+                                  max_batch)
+
+    def paged_cache_specs(self, num_blocks: int, block_size: int,
+                          max_batch: int):
+        return jax.eval_shape(lambda: T.make_paged_cache(
+            self.cfg, num_blocks, block_size, max_batch))
+
+    def decode_paged(self, params, cache, batch):
+        return T.decode_step_paged(params, cache, batch, self.cfg)
+
+    def prefill_chunk_paged(self, params, cache, batch):
+        return T.prefill_chunk_paged(params, cache, batch, self.cfg)
+
     # -- batch specs ----------------------------------------------------------
     def batch_specs(self, shape_kind: str, global_batch: int, seq_len: int):
         """ShapeDtypeStruct stand-ins for every model input (§input_specs)."""

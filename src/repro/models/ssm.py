@@ -25,10 +25,13 @@ def _split_proj(p, x, cfg):
     return z, xBC, dt
 
 
-def _causal_conv(xBC, weight, bias, prev=None):
+def _causal_conv(xBC, weight, bias, prev=None, valid_len=None):
     """Depthwise causal conv, width W.  xBC: (B, T, Ch); weight: (W, Ch).
 
     ``prev``: (B, W-1, Ch) history for decode; returns (out, new_prev).
+    ``valid_len``: only the first ``valid_len`` tokens are real (chunked
+    prefill pads the tail) — the carried history then ends at the last
+    REAL token, not the padding.
     """
     W = weight.shape[0]
     if prev is None:
@@ -36,15 +39,30 @@ def _causal_conv(xBC, weight, bias, prev=None):
     xpad = jnp.concatenate([prev, xBC], axis=1)     # (B, T+W-1, Ch)
     out = sum(xpad[:, i:i + xBC.shape[1]] * weight[i] for i in range(W))
     out = jax.nn.silu(out + bias)
-    new_prev = xpad[:, -(W - 1):] if W > 1 else prev
+    if W <= 1:
+        new_prev = prev
+    elif valid_len is None:
+        new_prev = xpad[:, -(W - 1):]
+    else:
+        # real tokens occupy xpad[:, W-1 : W-1+valid_len); the last W-1 of
+        # them start at index valid_len (scalar, or (B,) for per-sequence
+        # tail-padded batches)
+        vl = jnp.asarray(valid_len)
+        if vl.ndim == 0:
+            new_prev = jax.lax.dynamic_slice_in_dim(xpad, vl, W - 1, axis=1)
+        else:
+            idx = vl[:, None] + jnp.arange(W - 1)[None]       # (B, W-1)
+            new_prev = jnp.take_along_axis(xpad, idx[:, :, None], axis=1)
     return out, new_prev
 
 
-def ssd_chunked(xh, Bm, Cm, dt, A_log, D, chunk):
+def ssd_chunked(xh, Bm, Cm, dt, A_log, D, chunk, init_state=None):
     """Chunked SSD scan.
 
     xh: (B, T, H, P); Bm, Cm: (B, T, N); dt: (B, T, H) (post-softplus);
-    A_log: (H,). Returns y: (B, T, H, P) and final state (B, H, P, N).
+    A_log: (H,); ``init_state``: optional (B, H, P, N) carry from a
+    previous chunk call (paged/chunked prefill — resumes mid-sequence).
+    Returns y: (B, T, H, P) and final state (B, H, P, N).
     """
     Bsz, T, H, P = xh.shape
     N = Bm.shape[-1]
@@ -101,7 +119,8 @@ def ssd_chunked(xh, Bm, Cm, dt, A_log, D, chunk):
         new = state * dec_i[:, :, None, None] + dBx_i
         return new, state                                    # emit PREV state
 
-    init = jnp.zeros((Bsz, H, P, N), f32)
+    init = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+            else init_state.astype(f32))
     final, prev_states = jax.lax.scan(
         step, init,
         (jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
@@ -116,11 +135,17 @@ def ssd_chunked(xh, Bm, Cm, dt, A_log, D, chunk):
     return y[:, :T0].astype(xh.dtype), final
 
 
-def mamba_block(p, x, cfg, conv_state=None, ssm_state=None, decode=False):
+def mamba_block(p, x, cfg, conv_state=None, ssm_state=None, decode=False,
+                valid_len=None):
     """Full mamba2 block. x: (B, T, D).
 
     Training/prefill: decode=False, returns (out, (conv_state, ssm_state)).
     Decode: T == 1 with states provided; O(1) update.
+    Chunked prefill: decode=False with states = the previous chunk's carry
+    and ``valid_len`` = real tokens in this (possibly tail-padded) chunk —
+    padded tokens get dt=0 (decay 1, zero contribution) so they cannot
+    perturb the carried state, and the conv history ends at the last real
+    token.
     """
     Bsz, T, Dm = x.shape
     di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
@@ -129,13 +154,18 @@ def mamba_block(p, x, cfg, conv_state=None, ssm_state=None, decode=False):
     z, xBC, dt = _split_proj(p, x, cfg)
     z = ann(z, BATCH, None, "model")
     xBC = ann(xBC, BATCH, None, "model")
-    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state,
+                                 valid_len=valid_len)
     xh, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
     xh = ann(xh.reshape(Bsz, T, H, P), BATCH, None, "model", None)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid_len is not None and not decode:
+        vl = jnp.asarray(valid_len).reshape(-1, 1, 1)   # scalar or (B,)
+        dt = jnp.where(jnp.arange(T)[None, :, None] < vl, dt, 0.0)
 
     if not decode:
-        y, final = ssd_chunked(xh, Bm, Cm, dt, p["A_log"], p["D"], cfg.ssm_chunk)
+        y, final = ssd_chunked(xh, Bm, Cm, dt, p["A_log"], p["D"],
+                               cfg.ssm_chunk, init_state=ssm_state)
     else:
         # recurrent: state (B, H, P, N)
         f32 = jnp.float32

@@ -23,8 +23,10 @@ import numpy as np
 from repro.dist.annotate import BATCH, ann
 
 from .common import ArchConfig, LayerSpec
-from .layers import (attn_block, attn_block_decode, cross_attn_block,
-                     gqa_attention, mlp_block, rmsnorm)
+from .layers import (attn_block, attn_block_decode, attn_block_decode_paged,
+                     attn_project_qkv, apply_rope, cross_attn_block,
+                     gqa_attention, mlp_block, paged_context_attention,
+                     rmsnorm, rope_freqs)
 from .moe import moe_block
 from .ssm import mamba_block
 
@@ -151,8 +153,13 @@ def init_params(cfg: ArchConfig, key):
 # forward blocks
 
 def apply_block(p, x, cfg: ArchConfig, spec: LayerSpec, enc_kv=None,
-                positions=None):
-    """Full-sequence block (train / prefill). Returns (x, cache, aux)."""
+                positions=None, lengths=None):
+    """Full-sequence block (train / prefill). Returns (x, cache, aux).
+
+    ``lengths``: (B,) live lengths of a tail-padded mixed-length prefill —
+    causal masking already hides pads from attention, but the SSM scan is
+    recurrent: without masking, pad tokens would evolve the cached state.
+    """
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
         from repro.perf_flags import FLAGS
@@ -165,7 +172,7 @@ def apply_block(p, x, cfg: ArchConfig, spec: LayerSpec, enc_kv=None,
         h, kv = attn_block(p["attn"], h, cfg, spec, positions=positions)
         cache = {"k": kv[0], "v": kv[1]}
     else:
-        h, (conv_s, ssm_s) = mamba_block(p["ssm"], h, cfg)
+        h, (conv_s, ssm_s) = mamba_block(p["ssm"], h, cfg, valid_len=lengths)
         cache = {"conv": conv_s, "ssm": ssm_s}
     if cfg.sandwich_norm:
         h = rmsnorm(h, p["ln1_post"], cfg.norm_eps)
@@ -192,9 +199,20 @@ def apply_block(p, x, cfg: ArchConfig, spec: LayerSpec, enc_kv=None,
 
 
 def apply_block_decode(p, x, cache, pos, cfg: ArchConfig, spec: LayerSpec,
-                       enc_kv=None):
+                       enc_kv=None, block_tables=None, active=None):
+    """One-token block step.  ``block_tables`` switches attention layers to
+    the paged pool (cache["k"]/["v"] are then (NB, bs, K, hd) pools and
+    ``pos`` is the (B,) per-sequence position vector).  ``active``: (B,)
+    bool — lanes that are NOT decoding this step (empty slots, requests
+    still mid-prefill) keep their recurrent SSM states untouched; their
+    attention writes already land in the sink block."""
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    if spec.kind == "attn":
+    if spec.kind == "attn" and block_tables is not None:
+        h, ck, cv = attn_block_decode_paged(p["attn"], h, cache["k"],
+                                            cache["v"], block_tables, pos,
+                                            cfg, spec)
+        new_cache = {"k": ck, "v": cv}
+    elif spec.kind == "attn":
         h, ck, cv = attn_block_decode(p["attn"], h, cache["k"], cache["v"],
                                       pos, cfg, spec)
         new_cache = {"k": ck, "v": cv}
@@ -202,6 +220,10 @@ def apply_block_decode(p, x, cache, pos, cfg: ArchConfig, spec: LayerSpec,
         h, (conv_s, ssm_s) = mamba_block(p["ssm"], h, cfg,
                                          conv_state=cache["conv"],
                                          ssm_state=cache["ssm"], decode=True)
+        if active is not None:
+            conv_s = jnp.where(active[:, None, None], conv_s, cache["conv"])
+            ssm_s = jnp.where(active[:, None, None, None], ssm_s,
+                              cache["ssm"])
         new_cache = {"conv": conv_s, "ssm": ssm_s}
     if cfg.sandwich_norm:
         h = rmsnorm(h, p["ln1_post"], cfg.norm_eps)
@@ -275,7 +297,7 @@ def final_logits(params, x, cfg):
 
 
 def run_stack(params, x, cfg: ArchConfig, enc_kvs=None, positions=None,
-              collect_cache=False):
+              collect_cache=False, lengths=None):
     """Scan the super-block stack. Returns (x, caches, aux_totals)."""
     pattern = cfg.pattern
 
@@ -289,7 +311,8 @@ def run_stack(params, x, cfg: ArchConfig, enc_kvs=None, positions=None,
             if spec.cross_attn and enc_kvs is not None:
                 enc_kv = xs["enc"][f"p{i}"]
             x, cache, aux = apply_block(bp[f"p{i}"], x, cfg, spec,
-                                        enc_kv=enc_kv, positions=positions)
+                                        enc_kv=enc_kv, positions=positions,
+                                        lengths=lengths)
             caches[f"p{i}"] = cache
             lb = lb + aux["load_balance"]
             rz = rz + aux["router_z"]
@@ -394,10 +417,16 @@ def chunked_ce_loss(params, x, tokens, cfg: ArchConfig):
     return total / (B * n_tok)
 
 
-def _fixup_prefill_cache(caches, cfg: ArchConfig, S: int, pad_to: int | None):
+def _fixup_prefill_cache(caches, cfg: ArchConfig, S: int, pad_to: int | None,
+                         lengths=None):
     """Convert full-length prefill KV to decode layout: windowed layers get
     ring-ordered last-``window`` entries; full layers optionally pad the S
-    axis to ``pad_to`` for decode headroom."""
+    axis to ``pad_to`` for decode headroom.
+
+    ``lengths``: optional (B,) per-sequence live lengths (including any
+    VLM prefix) for tail-padded mixed-length batches — windowed rings are
+    then aligned per sequence (positions past a sequence's length hold
+    pad garbage; decode masks them via its per-sequence cache_len)."""
     out = {}
     for i, spec in enumerate(cfg.pattern):
         c = caches[f"p{i}"]
@@ -409,7 +438,18 @@ def _fixup_prefill_cache(caches, cfg: ArchConfig, S: int, pad_to: int | None):
             # buffer = min(window, max(S, pad_to)): ring once past window,
             # padded headroom before that
             target = min(spec.window, max(S, pad_to or S))
-            if S > target:             # ring of exactly `window`
+            if lengths is not None:
+                # ring slot j of a length-L sequence holds position
+                # p_j = L-1 - ((L-1-j) mod target)  (the last `target`
+                # positions in ring order); out-of-range slots clip to a
+                # garbage row that decode's cache_len mask hides
+                j = jnp.arange(target)
+                last = lengths[:, None] - 1                 # (B, 1)
+                src = jnp.clip(last - ((last - j[None]) % target), 0, S - 1)
+                idx = src[None, :, :, None, None]           # (1,B,T,1,1)
+                k = jnp.take_along_axis(k, idx, axis=2)
+                v = jnp.take_along_axis(v, idx, axis=2)
+            elif S > target:           # ring of exactly `window`
                 s0 = (S - target) % target
                 k = jnp.roll(k[:, :, -target:], s0, axis=2)
                 v = jnp.roll(v[:, :, -target:], s0, axis=2)
@@ -424,11 +464,22 @@ def _fixup_prefill_cache(caches, cfg: ArchConfig, S: int, pad_to: int | None):
 
 
 def prefill(params, batch, cfg: ArchConfig, pad_to: int | None = None):
-    """Forward building caches; returns (last_logits, cache_pytree)."""
+    """Forward building caches; returns (last_logits, cache_pytree).
+
+    ``batch["lengths"]`` (optional, (B,) int32): per-sequence real prompt
+    lengths for tail-padded mixed-length batches.  Last logits are then
+    taken at each sequence's own final token (not the pad tail) and the
+    cache ``pos`` becomes a per-sequence vector, so decode continues each
+    sequence at ITS length — pad rows beyond a sequence's length are
+    masked by decode's per-sequence cache_len and progressively
+    overwritten by decoded tokens.
+    """
     tokens = batch["tokens"]
+    lengths = batch.get("lengths")
     x = embed_tokens(params, tokens, cfg)
     enc_kvs = None
     extra = {}
+    prefix = 0
     if cfg.encoder_layers:
         enc_out = run_encoder(params, batch["frames"], cfg)
         enc_kvs = encoder_cross_kv(params, enc_out, cfg)
@@ -437,13 +488,35 @@ def prefill(params, batch, cfg: ArchConfig, pad_to: int | None = None):
         pre = batch["patches"].astype(cfg.activation_dtype()) \
             @ params["frontend_proj"]
         x = jnp.concatenate([pre, x], axis=1)
+        prefix = pre.shape[1]
+    eff = (None if lengths is None
+           else (prefix + lengths).astype(jnp.int32))   # incl. VLM prefix
     x, caches, _ = run_stack(params, x, cfg, enc_kvs=enc_kvs,
-                             collect_cache=True)
+                             collect_cache=True, lengths=eff)
     S = x.shape[1]
-    caches = _fixup_prefill_cache(caches, cfg, S, pad_to)
-    logits = final_logits(params, x[:, -1:], cfg)
-    return logits[:, 0], {"layers": caches, **extra,
-                          "pos": jnp.asarray(S, jnp.int32)}
+    if lengths is None:
+        caches = _fixup_prefill_cache(caches, cfg, S, pad_to)
+        logits = final_logits(params, x[:, -1:], cfg)
+        pos = jnp.asarray(S, jnp.int32)
+    else:
+        caches = _fixup_prefill_cache(caches, cfg, S, pad_to, lengths=eff)
+        x_last = jnp.take_along_axis(x, (eff - 1)[:, None, None], axis=1)
+        logits = final_logits(params, x_last, cfg)
+        pos = eff
+    return logits[:, 0], {"layers": caches, **extra, "pos": pos}
+
+
+def _stack_step(cfg, body, x, xs):
+    """Run ``body`` over the super-block stack (unrolled <=4 for exact
+    cost_analysis, ``lax.scan`` else), stacking the per-super-block cache
+    outputs — the shared dispatch of every decode/prefill step."""
+    if cfg.n_super <= 4:
+        ys = []
+        for i in range(cfg.n_super):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return jax.lax.scan(body, x, xs)
 
 
 def decode_step(params, cache, batch, cfg: ArchConfig):
@@ -469,14 +542,7 @@ def decode_step(params, cache, batch, cfg: ArchConfig):
     xs = {"params": params["blocks"], "cache": cache["layers"]}
     if enc_kvs is not None:
         xs["enc"] = enc_kvs
-    if cfg.n_super <= 4:
-        ys = []
-        for i in range(cfg.n_super):
-            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
-            ys.append(y)
-        new_layers = jax.tree.map(lambda *a: jnp.stack(a), *ys)
-    else:
-        x, new_layers = jax.lax.scan(body, x, xs)
+    x, new_layers = _stack_step(cfg, body, x, xs)
     logits = final_logits(params, x[:, -1:], cfg)
     new_cache = {**cache, "layers": new_layers, "pos": pos + 1}
     return logits[:, 0], new_cache
@@ -520,3 +586,163 @@ def make_cache(cfg: ArchConfig, batch: int, seq_len: int, enc_len: int = 0):
                                 jnp.zeros((cfg.n_super, batch, enc_len, K, hd), dt))
         cache["enc_kvs"] = kvs
     return cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode path (DESIGN.md §9): block-pool KV cache + per-slot SSM
+# states, continuous-batching step functions.  Host-side block bookkeeping
+# lives in repro.serve.paging; these are the pure device-side steps.
+
+
+def make_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     max_batch: int):
+    """Zeroed paged cache: per attention pattern-position a physical block
+    pool (n_super, num_blocks, block_size, K, hd); SSM layers keep per-slot
+    recurrent states (their footprint is position-independent — nothing to
+    page).  Block 0 is the sink (``serve.paging.SINK_BLOCK``)."""
+    if cfg.encoder_layers:
+        raise ValueError("paged decode does not support enc-dec archs "
+                         "(cross-attention caches are per-request static)")
+    dt = cfg.activation_dtype()
+    K, hd = cfg.n_kv_heads, cfg.hd
+    layers = {}
+    for i, spec in enumerate(cfg.pattern):
+        n = cfg.n_super
+        if spec.kind == "attn":
+            layers[f"p{i}"] = {
+                "k": jnp.zeros((n, num_blocks, block_size, K, hd), dt),
+                "v": jnp.zeros((n, num_blocks, block_size, K, hd), dt)}
+        else:
+            ch = cfg.d_inner + 2 * cfg.ssm_state
+            layers[f"p{i}"] = {
+                "conv": jnp.zeros((n, max_batch, cfg.conv_width - 1, ch), dt),
+                "ssm": jnp.zeros((n, max_batch, cfg.ssm_heads, cfg.ssm_p,
+                                  cfg.ssm_state), jnp.float32)}
+    return {"layers": layers}
+
+
+def decode_step_paged(params, cache, batch, cfg: ArchConfig):
+    """One continuous-batching decode step.
+
+    batch: tokens (B, 1); block_tables (B, P) int32 (sink-filled for
+    inactive lanes); pos (B,) int32 — the incoming token's absolute
+    position per lane (0 for inactive lanes, whose writes land in the
+    sink block); active (B,) bool — lanes decoding this step (inactive
+    lanes' SSM states are preserved).  Returns (logits (B, V), new_cache).
+    """
+    tokens, tables, pos = batch["tokens"], batch["block_tables"], batch["pos"]
+    active = batch["active"]
+    x = embed_tokens(params, tokens, cfg)
+    pattern = cfg.pattern
+
+    def body(x, xs):
+        bp, layer_cache = xs["params"], xs["cache"]
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            x, nc = apply_block_decode(bp[f"p{i}"], x, layer_cache[f"p{i}"],
+                                       pos, cfg, spec, block_tables=tables,
+                                       active=active)
+            new_caches[f"p{i}"] = nc
+        return x, new_caches
+
+    xs = {"params": params["blocks"], "cache": cache["layers"]}
+    x, new_layers = _stack_step(cfg, body, x, xs)
+    logits = final_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], {**cache, "layers": new_layers}
+
+
+def _apply_block_prefill_paged(p, x, layer_cache, cfg, spec, *, tables,
+                               start, length, slot, positions):
+    """One block of a paged prefill chunk.  x: (1, C, D).  Writes the
+    chunk's K/V rows through the (1, P) block table (pad rows -> sink),
+    attends against the gathered logical context, and threads the slot's
+    SSM states.  Returns (x, new_layer_cache)."""
+    C = x.shape[1]
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        k_pool, v_pool = layer_cache["k"], layer_cache["v"]
+        NB, bs, K, hd = k_pool.shape
+        P = tables.shape[1]
+        q, k, v = attn_project_qkv(p["attn"], h, cfg)
+        cos, sin = rope_freqs(positions, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cos[None], sin[None])
+        k = apply_rope(k, cos[None], sin[None])
+        j = jnp.arange(C)
+        page = jnp.clip(positions // bs, 0, P - 1)
+        idx = jnp.where(j < length,
+                        tables[0, page] * bs + positions % bs, 0)
+        k_pool = k_pool.reshape(NB * bs, K, hd).at[idx].set(
+            k[0]).reshape(NB, bs, K, hd)
+        v_pool = v_pool.reshape(NB * bs, K, hd).at[idx].set(
+            v[0]).reshape(NB, bs, K, hd)
+        # gather the logical context (chunk rows included) and attend
+        ctx_k = k_pool[tables[0]].reshape(1, P * bs, K, hd)
+        ctx_v = v_pool[tables[0]].reshape(1, P * bs, K, hd)
+        h = paged_context_attention(q, ctx_k, ctx_v, q_offset=start,
+                                    kv_len=start + length,
+                                    window=spec.window,
+                                    softcap=cfg.attn_softcap)
+        h = jnp.einsum("bshk,hkd->bsd", h, p["attn"]["wo"])
+        new_cache = {"k": k_pool, "v": v_pool}
+    else:
+        conv_all, ssm_all = layer_cache["conv"], layer_cache["ssm"]
+        conv0 = jax.lax.dynamic_slice_in_dim(conv_all, slot, 1, axis=0)
+        ssm0 = jax.lax.dynamic_slice_in_dim(ssm_all, slot, 1, axis=0)
+        fresh = start == 0           # first chunk starts from zero state
+        conv0 = jnp.where(fresh, jnp.zeros_like(conv0), conv0)
+        ssm0 = jnp.where(fresh, jnp.zeros_like(ssm0), ssm0)
+        h, (nconv, nssm) = mamba_block(p["ssm"], h, cfg, conv_state=conv0,
+                                       ssm_state=ssm0, valid_len=length)
+        conv_all = jax.lax.dynamic_update_slice_in_dim(
+            conv_all, nconv.astype(conv_all.dtype), slot, axis=0)
+        ssm_all = jax.lax.dynamic_update_slice_in_dim(
+            ssm_all, nssm.astype(ssm_all.dtype), slot, axis=0)
+        new_cache = {"conv": conv_all, "ssm": ssm_all}
+    if cfg.sandwich_norm:
+        h = rmsnorm(h, p["ln1_post"], cfg.norm_eps)
+    x = x + h
+    if spec.mlp != "none":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if spec.mlp == "moe":
+            h, _ = moe_block(p["moe"], h, cfg)
+        else:
+            h = mlp_block(p["mlp"], h, spec.mlp)
+        if cfg.sandwich_norm:
+            h = rmsnorm(h, p["ln2_post"], cfg.norm_eps)
+        x = x + h
+    return x, new_cache
+
+
+def prefill_chunk_paged(params, cache, batch, cfg: ArchConfig):
+    """One prompt chunk of a paged prefill (continuous batching admits
+    long prompts chunk by chunk so decode lanes never stall behind them).
+
+    batch: tokens (1, C) (tail-padded); block_tables (1, P) int32 for the
+    admitted slot; start (scalar) absolute position of tokens[:, 0];
+    length (scalar) real tokens in this chunk; slot (scalar) the decode
+    lane (SSM state row).  Returns (last_real_token_logits (1, V),
+    new_cache).
+    """
+    tokens, tables = batch["tokens"], batch["block_tables"]
+    start, length, slot = batch["start"], batch["length"], batch["slot"]
+    C = tokens.shape[1]
+    x = embed_tokens(params, tokens, cfg)
+    positions = start + jnp.arange(C)
+    pattern = cfg.pattern
+
+    def body(x, xs):
+        bp, layer_cache = xs["params"], xs["cache"]
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            x, nc = _apply_block_prefill_paged(
+                bp[f"p{i}"], x, layer_cache[f"p{i}"], cfg, spec,
+                tables=tables, start=start, length=length, slot=slot,
+                positions=positions)
+            new_caches[f"p{i}"] = nc
+        return x, new_caches
+
+    xs = {"params": params["blocks"], "cache": cache["layers"]}
+    x, new_layers = _stack_step(cfg, body, x, xs)
+    x_last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    logits = final_logits(params, x_last, cfg)
+    return logits[:, 0], {**cache, "layers": new_layers}

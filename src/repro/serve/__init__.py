@@ -1,3 +1,5 @@
-from .engine import ServeEngine
+from .engine import PagedServeEngine, Request, ServeEngine, ServeStats
+from .paging import BlockAllocator, BlockTables, PagingError, SINK_BLOCK
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "PagedServeEngine", "Request", "ServeStats",
+           "BlockAllocator", "BlockTables", "PagingError", "SINK_BLOCK"]

@@ -1,14 +1,29 @@
-"""Batched serving engine: prefill + decode with KV/SSM caches.
+"""Serving engines: static batched decode and paged continuous batching.
 
-Requests are batched; prefill builds the cache (padded to max_len for
-decode headroom), then greedy/temperature decode steps run jointly for
-the whole batch.  Both phases are single jitted calls (lowered with the
-same shardings as the dry-run's prefill/serve steps).
+``ServeEngine`` is the static path: one batch, prompts tail-padded to a
+common length, a dense ``(B, max_len)`` KV cache, lockstep decode until
+the batch's token budget is exhausted.  Mixed-length prompts are handled
+honestly (per-sequence ``lengths`` thread through prefill; decode masks
+each sequence's own live cache length) but the *memory* is still padded
+capacity and the *schedule* still runs the whole batch until the slowest
+request finishes.
+
+``PagedServeEngine`` is the continuous-batching path (DESIGN.md §9):
+KV storage is a pool of fixed-size blocks (``serve/paging.py``), decode
+lanes are slots that requests flow through — admission fills free slots
+each step, long prompts prefill chunk-by-chunk so they never stall the
+decode batch, finished sequences release their blocks immediately.
+Decode attention gathers K/V through per-sequence block tables (the
+Pallas ``kernels/paged_attention.py`` kernel on TPU).
+
+Both engines report jit compile time separately (``compile_s``) so
+``tok_per_s`` measures steady-state decode, not compilation.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -16,12 +31,18 @@ import numpy as np
 
 from repro.models import ArchConfig, get_model
 
+from .paging import BlockAllocator, BlockTables, PagingError
+
 
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    tokens_out: int = 0
+    compile_s: float = 0.0     # jit compile + first-call warmup, reported
+    tokens_out: int = 0        # tokens produced by TIMED decode steps (each
+    steps: int = 0             # request's first token comes from prefill
+    peak_cache_blocks: int = 0   # logits and is counted by neither engine)
+    peak_cache_bytes: int = 0    # paged engine only
 
     @property
     def tok_per_s(self):
@@ -29,6 +50,8 @@ class ServeStats:
 
 
 class ServeEngine:
+    """Static batch engine: dense padded cache, lockstep decode."""
+
     def __init__(self, cfg: ArchConfig, params, max_len: int = 512):
         self.cfg = cfg
         self.model = get_model(cfg)
@@ -38,24 +61,42 @@ class ServeEngine:
             lambda p, b: self.model.prefill(p, b, pad_to=max_len))
         self._decode = jax.jit(self.model.decode)
 
-    def pad_batch(self, prompts: list[list[int]]):
-        """Left-align prompts to a common length (pad with 0)."""
-        L = max(len(p) for p in prompts)
+    def pad_batch(self, prompts: list[list[int]], pad_to: int | None = None):
+        """Tail-pad prompts to a common length.  Returns (tokens (B, L),
+        lengths (B,)) — the lengths ride along so prefill takes each
+        sequence's logits at its OWN last token and decode masks the pad
+        tail (pad id 0 is a real vocab id; masking, not the pad value,
+        is what keeps it out of attention).  ``pad_to`` fixes L across
+        batches so multi-batch serving compiles prefill once."""
+        L = max(max(len(p) for p in prompts), pad_to or 0)
         toks = np.zeros((len(prompts), L), np.int32)
         for i, p in enumerate(prompts):
             toks[i, :len(p)] = p
-        return jnp.asarray(toks)
+        lengths = np.asarray([len(p) for p in prompts], np.int32)
+        return jnp.asarray(toks), jnp.asarray(lengths)
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int = 32,
                  temperature: float = 0.0, seed: int = 0,
-                 extra_inputs: dict | None = None):
+                 extra_inputs: dict | None = None, warmup: bool = True,
+                 pad_prompts_to: int | None = None):
         """Returns (tokens (B, max_new_tokens), ServeStats)."""
-        toks = self.pad_batch(prompts)
-        batch = {"tokens": toks, **(extra_inputs or {})}
+        toks, lengths = self.pad_batch(prompts, pad_to=pad_prompts_to)
+        batch = {"tokens": toks, "lengths": lengths, **(extra_inputs or {})}
+        stats = ServeStats()
+        if warmup:
+            # compile both steps on the real shapes; one throwaway
+            # execution each (compile dominates) keeps tok_per_s honest
+            t0 = time.time()
+            logits, cache = self._prefill(self.params, batch)
+            wtok = jnp.zeros((len(prompts), 1), jnp.int32)
+            wl, _ = self._decode(self.params, cache, {"tokens": wtok})
+            jax.block_until_ready(wl)
+            stats.compile_s = time.time() - t0
+
         t0 = time.time()
         logits, cache = self._prefill(self.params, batch)
         logits.block_until_ready()
-        stats = ServeStats(prefill_s=time.time() - t0)
+        stats.prefill_s = time.time() - t0
 
         key = jax.random.PRNGKey(seed)
         out = []
@@ -71,5 +112,276 @@ class ServeEngine:
                                          {"tokens": nxt[:, None].astype(jnp.int32)})
         jax.block_until_ready(logits)
         stats.decode_s = time.time() - t0
-        stats.tokens_out = len(prompts) * max_new_tokens
+        stats.steps = max_new_tokens
+        # first tokens are prefill-derived — same accounting as the paged
+        # engine so --paged / static tok_per_s compare apples to apples
+        stats.tokens_out = len(prompts) * max(0, max_new_tokens - 1)
         return np.stack([np.asarray(t) for t in out], axis=1), stats
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out: list[int] = field(default_factory=list)
+    prefilled: int = 0          # prompt tokens already in the cache
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new_tokens
+
+
+class PagedServeEngine:
+    """Paged KV-cache + continuous-batching decode (DESIGN.md §9).
+
+    ``max_batch`` decode lanes over a block pool of ``num_blocks`` blocks
+    of ``block_size`` tokens (block 0 is the sink).  Admission is
+    reservation-checked: a request is admitted only when its worst-case
+    block need (prompt + generation budget) fits alongside every other
+    admitted request's, so the engine can never deadlock on the free
+    list.  Long prompts prefill at most ``prefill_chunks_per_step``
+    chunks of ``prefill_chunk`` tokens per engine step, interleaved with
+    decode steps for the already-running lanes.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *, block_size: int = 16,
+                 max_batch: int = 8, max_len: int = 512,
+                 prefill_chunk: int = 64, num_blocks: int | None = None,
+                 prefill_chunks_per_step: int = 1):
+        if cfg.encoder_layers or cfg.frontend_tokens:
+            raise ValueError("paged serving supports decoder-only text "
+                             "archs (no enc-dec / multimodal prefixes)")
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.block_size = block_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.prefill_chunks_per_step = prefill_chunks_per_step
+        self.max_pages = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = max_batch * self.max_pages + 1   # +1: sink
+        self.alloc = BlockAllocator(num_blocks, block_size)
+        self.tables = BlockTables(self.alloc, max_batch, self.max_pages)
+        self.cache = self.model.make_paged_cache(num_blocks, block_size,
+                                                 max_batch)
+        self._decode = jax.jit(self.model.decode_paged, donate_argnums=(1,))
+        self._chunk = jax.jit(self.model.prefill_chunk_paged,
+                              donate_argnums=(1,))
+        self.pos = np.zeros(max_batch, np.int64)   # tokens in cache per lane
+        self.slots: list[Request | None] = [None] * max_batch
+        self.pending: deque[Request] = deque()
+        self.completed: dict[int, list[int]] = {}  # rid -> emitted tokens
+        self._last_logits: dict[int, jax.Array] = {}   # slot -> (V,) logits
+        self._reserved_blocks = 0
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(0)
+        self.temperature = 0.0
+
+    # -- request lifecycle --------------------------------------------------
+    def add_request(self, prompt: list[int], max_new_tokens: int) -> int:
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise PagingError(
+                f"prompt({len(prompt)}) + new({max_new_tokens}) exceeds "
+                f"max_len={self.max_len}")
+        need = self.tables.pages_for(len(prompt) + max_new_tokens)
+        if need > self.alloc.num_blocks - 1:
+            raise PagingError(
+                f"request needs {need} blocks but the pool only has "
+                f"{self.alloc.num_blocks - 1} — it could never be admitted")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    def _worst_case_pages(self, req: Request) -> int:
+        return self.tables.pages_for(len(req.prompt) + req.max_new_tokens)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.pending:
+                continue
+            need = self._worst_case_pages(self.pending[0])
+            if self._reserved_blocks + need > self.alloc.num_blocks - 1:
+                break                       # head-of-line: keep FIFO order
+            req = self.pending.popleft()
+            self._reserved_blocks += need
+            self.slots[slot] = req
+            self.pos[slot] = 0
+            req.prefilled = 0
+
+    def _finish(self, slot: int):
+        req = self.slots[slot]
+        self.completed[req.rid] = list(req.out)
+        self._reserved_blocks -= self._worst_case_pages(req)
+        self.tables.release(slot)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self._last_logits.pop(slot, None)
+
+    # -- device steps -------------------------------------------------------
+    def _prefill_one_chunk(self, slot: int, stats: ServeStats):
+        req = self.slots[slot]
+        C = self.prefill_chunk
+        start = req.prefilled
+        chunk = req.prompt[start:start + C]
+        n = len(chunk)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = chunk
+        self.tables.ensure(slot, start + n)
+        batch = {"tokens": jnp.asarray(toks),
+                 "block_tables": jnp.asarray(self.tables.row(slot)[None]),
+                 "start": jnp.asarray(start, jnp.int32),
+                 "length": jnp.asarray(n, jnp.int32),
+                 "slot": jnp.asarray(slot, jnp.int32)}
+        t0 = time.time()
+        logits, self.cache = self._chunk(self.params, self.cache, batch)
+        logits.block_until_ready()
+        stats.prefill_s += time.time() - t0
+        req.prefilled += n
+        self.pos[slot] = req.prefilled
+        if req.prefilled >= len(req.prompt):
+            self._last_logits[slot] = logits[0]   # sample at next decode
+
+    def _sample(self, logits):
+        if self.temperature > 0:
+            self._key, sub = jax.random.split(self._key)
+            return jax.random.categorical(sub, logits / self.temperature, -1)
+        return jnp.argmax(logits, -1)
+
+    def step(self, stats: ServeStats | None = None) -> int:
+        """One engine step: admit, advance prefills, decode every running
+        lane, retire finished requests.  Returns tokens emitted."""
+        stats = stats if stats is not None else ServeStats()
+        self._admit()
+
+        budget = self.prefill_chunks_per_step
+        for slot, req in enumerate(self.slots):
+            if budget <= 0:
+                break
+            if req is not None and req.prefilled < len(req.prompt):
+                self._prefill_one_chunk(slot, stats)
+                budget -= 1
+
+        # sample the first token for lanes whose prefill just completed
+        for slot, logits in list(self._last_logits.items()):
+            req = self.slots[slot]
+            req.out.append(int(np.asarray(self._sample(logits))))
+            del self._last_logits[slot]
+            if req.done:                      # degenerate 1-token budget
+                self._finish(slot)
+
+        lanes = [b for b, r in enumerate(self.slots)
+                 if r is not None and r.prefilled >= len(r.prompt)
+                 and not r.done]
+        if not lanes:
+            return 0
+
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        tables = np.zeros_like(self.tables.tables)
+        pos = np.zeros(self.max_batch, np.int32)
+        active = np.zeros(self.max_batch, bool)
+        for b in lanes:
+            req = self.slots[b]
+            toks[b, 0] = req.out[-1]
+            # the incoming token is written at position pos[b]
+            self.tables.ensure(b, int(self.pos[b]) + 1)
+            tables[b] = self.tables.row(b)
+            pos[b] = self.pos[b]
+            active[b] = True
+        batch = {"tokens": jnp.asarray(toks),
+                 "block_tables": jnp.asarray(tables),
+                 "pos": jnp.asarray(pos),
+                 "active": jnp.asarray(active)}
+        t0 = time.time()
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        nxt = np.asarray(self._sample(logits))
+        stats.decode_s += time.time() - t0
+        stats.steps += 1
+
+        for b in lanes:
+            req = self.slots[b]
+            req.out.append(int(nxt[b]))
+            self.pos[b] += 1
+            stats.tokens_out += 1
+            if req.done:
+                self._finish(b)
+        return len(lanes)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.slots)
+
+    def run(self, stats: ServeStats | None = None,
+            max_steps: int = 1_000_000) -> ServeStats:
+        stats = stats if stats is not None else ServeStats()
+        # report THIS run's high-water mark (in-flight blocks still count)
+        self.alloc.peak_in_use = self.alloc.in_use
+        steps = 0
+        while self.busy:
+            self.step(stats)
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("engine did not drain the request queue")
+        stats.peak_cache_blocks = self.alloc.peak_in_use
+        from repro.core.memplan import kv_cache_bytes_paged
+        stats.peak_cache_bytes = (self.alloc.peak_in_use
+                                  * kv_cache_bytes_paged(
+                                      self.cfg, [], self.block_size)
+                                  ["block_bytes"])
+        return stats
+
+    def reset(self):
+        """Drop all requests and recycle every block (cache contents stay
+        — they are garbage by definition once unreferenced)."""
+        for slot, r in enumerate(self.slots):
+            if r is not None:
+                self._finish(slot)
+        self.pending.clear()
+        self.alloc = BlockAllocator(self.alloc.num_blocks, self.block_size)
+        self.tables = BlockTables(self.alloc, self.max_batch, self.max_pages)
+        self.pos[:] = 0
+        self._reserved_blocks = 0
+
+    def warmup(self) -> float:
+        """Compile the chunk-prefill and decode steps (one throwaway
+        request); returns the wall time (reported as ``compile_s``)."""
+        t0 = time.time()
+        saved_pending = self.pending
+        self.pending = deque()
+        self.add_request([1] * min(self.prefill_chunk + 1,
+                                   self.max_len - 2), 2)
+        self.run()
+        self.reset()
+        self.pending = saved_pending
+        return time.time() - t0
+
+    def generate(self, prompts: list[list[int]],
+                 max_new_tokens: int | list[int] = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 warmup: bool = True):
+        """Batch convenience API: enqueue everything, run to drain.
+
+        Returns (list of per-request token lists, ServeStats) — requests
+        may have different ``max_new_tokens`` (continuous batching's whole
+        point), so the output is ragged.
+        """
+        stats = ServeStats()
+        if warmup:
+            self.temperature = 0.0      # throwaway request decodes greedily
+            stats.compile_s = self.warmup()
+        # seed AFTER warmup so sampled streams are reproducible across
+        # warmup settings
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        budgets = (max_new_tokens if isinstance(max_new_tokens, (list, tuple))
+                   else [max_new_tokens] * len(prompts))
+        rids = [self.add_request(p, n) for p, n in zip(prompts, budgets)]
+        self.run(stats)
+        return [self.completed[r] for r in rids], stats

@@ -1,0 +1,128 @@
+"""Paged KV-cache bookkeeping: block allocator + per-sequence block tables.
+
+The device-side cache is a pool of fixed-size blocks per attention layer
+(``make_paged_cache`` in ``models/transformer.py``); this module owns the
+*host-side* metadata — which physical block backs which logical page of
+which sequence — exactly the split the MXNet §3.1 memory planner makes
+between the static byte plan and the runtime buffers.
+
+Conventions:
+
+* physical block 0 is the **sink**: it backs every table entry that maps
+  no real page (empty slots, pages past a sequence's length) so device
+  writes from inactive decode lanes land somewhere harmless.  Block 0 is
+  never handed out by the allocator and its contents are garbage by
+  design (always masked out of attention by the per-sequence length).
+* block tables are dense ``(max_batch, max_pages)`` int32 arrays, sink-
+  filled; logical page ``p`` of slot ``b`` covers absolute positions
+  ``[p*block_size, (p+1)*block_size)``.
+* the allocator tracks ``peak_in_use`` so benchmarks can report the true
+  high-water cache footprint against the dense ``B x max_len`` padding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+SINK_BLOCK = 0
+
+
+class PagingError(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size cache blocks.
+
+    Block ids are ints in ``[1, num_blocks)``; id 0 is the reserved sink
+    and is never allocated.  ``free`` of a block not currently in use
+    (double-free, sink, out of range) raises ``PagingError`` — the
+    allocator is the ground truth the engine's slot recycling is audited
+    against (``tests/test_serve.py``).
+    """
+
+    num_blocks: int
+    block_size: int
+    _free: list[int] = field(default_factory=list)
+    _in_use: set[int] = field(default_factory=set)
+    peak_in_use: int = 0
+
+    def __post_init__(self):
+        if self.num_blocks < 2:
+            raise PagingError("need >= 2 blocks (block 0 is the sink)")
+        # LIFO free list: recently-freed blocks are re-used first (warm)
+        self._free = list(range(self.num_blocks - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise PagingError(
+                f"out of cache blocks: want {n}, have {len(self._free)} "
+                f"free of {self.num_blocks - 1}")
+        out = [self._free.pop() for _ in range(n)]
+        self._in_use.update(out)
+        self.peak_in_use = max(self.peak_in_use, len(self._in_use))
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b not in self._in_use:
+                raise PagingError(
+                    f"free of block {b} that is not in use "
+                    f"(double-free or sink)")
+            self._in_use.remove(b)
+            self._free.append(b)
+
+
+class BlockTables:
+    """Per-slot logical-page -> physical-block maps over one allocator.
+
+    ``ensure(slot, length)`` grows slot ``slot``'s table to cover
+    ``length`` tokens (allocating blocks as needed); ``release(slot)``
+    returns every block to the free list and sink-fills the row.  The
+    ``tables`` array is passed to the device step functions as-is.
+    """
+
+    def __init__(self, alloc: BlockAllocator, max_batch: int,
+                 max_pages: int):
+        self.alloc = alloc
+        self.max_pages = max_pages
+        self.tables = np.full((max_batch, max_pages), SINK_BLOCK, np.int32)
+        self._n_pages = np.zeros(max_batch, np.int32)
+
+    def pages_for(self, length: int) -> int:
+        return -(-int(length) // self.alloc.block_size)
+
+    def ensure(self, slot: int, length: int) -> None:
+        """Back positions ``[0, length)`` of ``slot`` with real blocks."""
+        want = self.pages_for(length)
+        if want > self.max_pages:
+            raise PagingError(
+                f"sequence needs {want} pages > max_pages={self.max_pages}")
+        have = int(self._n_pages[slot])
+        if want > have:
+            for p, blk in zip(range(have, want), self.alloc.alloc(want - have)):
+                self.tables[slot, p] = blk
+            self._n_pages[slot] = want
+
+    def release(self, slot: int) -> None:
+        n = int(self._n_pages[slot])
+        if n:
+            self.alloc.free([int(b) for b in self.tables[slot, :n]])
+        self.tables[slot, :] = SINK_BLOCK
+        self._n_pages[slot] = 0
+
+    def row(self, slot: int) -> np.ndarray:
+        return self.tables[slot]
+
+    def n_pages(self, slot: int) -> int:
+        return int(self._n_pages[slot])

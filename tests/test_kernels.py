@@ -194,6 +194,96 @@ def test_flash_attention_kv_len_masking():
 
 
 # ---------------------------------------------------------------------------
+# paged attention (ISSUE 4, DESIGN.md §9)
+
+def _paged_case(B, H, K, hd, bs, NB, P, lengths, seed=5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (NB, bs, K, hd))
+    vp = jax.random.normal(ks[2], (NB, bs, K, hd))
+    # distinct physical blocks per (seq, page), none using the sink 0
+    tables = (1 + jnp.arange(B * P, dtype=jnp.int32) % (NB - 1)).reshape(B, P)
+    return q, kp, vp, tables, jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("H,K", [(4, 4), (4, 2), (8, 1)])  # MHA, GQA, MQA
+def test_paged_attention_gqa_vs_ref(H, K):
+    from repro.kernels.paged_attention import paged_attention
+    q, kp, vp, tables, lengths = _paged_case(
+        B=3, H=H, K=K, hd=32, bs=8, NB=16, P=4, lengths=[19, 8, 1])
+    out = paged_attention(q, kp, vp, tables, lengths)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("lengths", [[8, 16, 24, 32],    # exact boundaries
+                                     [7, 9, 17, 31],     # straddling
+                                     [1, 2, 33, 40]])    # edges + full
+def test_paged_attention_block_boundaries(lengths):
+    from repro.kernels.paged_attention import paged_attention
+    q, kp, vp, tables, lengths = _paged_case(
+        B=4, H=4, K=2, hd=64, bs=8, NB=24, P=5, lengths=lengths)
+    out = paged_attention(q, kp, vp, tables, lengths)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(6, None), (None, 20.0),
+                                            (16, 30.0)])
+def test_paged_attention_window_softcap(window, softcap):
+    from repro.kernels.paged_attention import paged_attention
+    q, kp, vp, tables, lengths = _paged_case(
+        B=2, H=4, K=2, hd=32, bs=8, NB=12, P=3, lengths=[21, 13])
+    q = q * 3                                   # exercise the softcap
+    out = paged_attention(q, kp, vp, tables, lengths, window=window,
+                          softcap=softcap)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths,
+                                   window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_matches_contiguous_flash():
+    """A paged sequence must attend identically to the same K/V laid out
+    contiguously (flash decode with q_offset) — table indirection is
+    layout only."""
+    B, H, K, hd, bs, P = 1, 4, 2, 32, 8, 4
+    S = 27                                      # straddles 4 pages
+    ks = jax.random.split(KEY, 3)
+    q1 = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    want = ref.flash_attention_ref(q1, k, v, causal=True, q_offset=S - 1)
+    # scatter the contiguous rows into shuffled physical blocks
+    order = np.asarray([3, 1, 4, 2])            # physical block per page
+    kp = np.zeros((6, bs, K, hd), np.float32)
+    vp = np.zeros((6, bs, K, hd), np.float32)
+    for page in range(P):
+        rows = np.asarray(k[0, page * bs:(page + 1) * bs])
+        kp[order[page], :rows.shape[0]] = rows
+        rows = np.asarray(v[0, page * bs:(page + 1) * bs])
+        vp[order[page], :rows.shape[0]] = rows
+    from repro.kernels.paged_attention import paged_attention
+    out = paged_attention(q1[:, 0], jnp.asarray(kp), jnp.asarray(vp),
+                          jnp.asarray(order[None], jnp.int32),
+                          jnp.asarray([S], jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want[:, 0]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_zero_length_lane_is_zero():
+    from repro.kernels.paged_attention import paged_attention
+    q, kp, vp, tables, _ = _paged_case(
+        B=2, H=4, K=2, hd=32, bs=8, NB=12, P=3, lengths=[5, 0])
+    out = paged_attention(q, kp, vp, tables,
+                          jnp.asarray([5, 0], jnp.int32))
+    assert np.abs(np.asarray(out[1])).max() == 0.0
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 
 @pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (1, 2048),
