@@ -9,9 +9,7 @@ CSV: name,mode,strategy,bytes,reduction_vs_naive
 """
 from __future__ import annotations
 
-import numpy as np
 
-from repro.core import reset_default_engine
 from repro.core.graph import Graph, infer_shapes
 from repro.core.memplan import naive_bytes, plan_graph
 from repro.configs.mxnet_mlp import symbol

@@ -1,7 +1,7 @@
 """The paper's own example model (MXNet Fig. 2): an MLP built with the
 Symbol API — used by the quickstart example and the Fig. 6/7 benchmarks."""
-from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
-                        chain)
+from repro.core import (Activation, FullyConnected, SoftmaxOutput,
+                        Variable)
 
 ARCH_ID = "mxnet-mlp"
 

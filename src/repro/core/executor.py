@@ -20,13 +20,11 @@ from __future__ import annotations
 from typing import Any, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from . import ops as _ops
 from .autodiff import gradient_with_shapes
 from .engine import Engine, Tag, default_engine
-from .graph import Graph, NodeRef, infer_shapes
+from .graph import NodeRef, infer_shapes
 from .memplan import Unit, naive_bytes, nbytes, plan_schedule
 from .ndarray import NDArray
 from .optimize import optimize_graph, fuse_elementwise

@@ -7,7 +7,7 @@ free variables' shapes are known.
 from __future__ import annotations
 
 import itertools
-from typing import Any, Callable, Iterable, NamedTuple
+from typing import Any, Iterable, NamedTuple
 
 _node_counter = itertools.count()
 

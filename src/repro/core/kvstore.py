@@ -33,7 +33,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import Engine, Tag, default_engine
+from .engine import Engine, default_engine
 from .ndarray import NDArray
 
 

@@ -22,9 +22,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import numpy as np
 
-from .graph import Graph, NodeRef
+from .graph import Graph
 from . import ops as _ops
 
 _DTYPE_BYTES = {"float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
@@ -264,6 +263,45 @@ def kv_cache_bytes_paged(cfg, lengths, block_size: int) -> dict:
     return {"bytes": blocks * block_bytes + len(lengths) * fixed,
             "blocks": blocks,
             "block_bytes": block_bytes}
+
+
+def pipeline_stage_bytes(cfg, *, n_stages: int, microbatches: int,
+                         global_batch: int, seq_len: int,
+                         n_data: int = 1) -> dict:
+    """Per-stage byte model of the 1F1B pipeline (DESIGN.md §10).
+
+    ``stage_param_bytes``: the layer-contiguous super-block slice each
+    stage owns (replicated params — embed/head/norms — are counted
+    separately).  ``stage_activation_bytes``: the saved stage *inputs*
+    (one (b, S, D) activation per in-flight microbatch — the backward
+    residuals; block internals are rematerialized).  ``permute`` is the
+    activation hand-off model (``dist.pipeline.pipeline_permute_bytes``).
+    """
+    from dataclasses import replace
+    from repro.dist.pipeline import (pipeline_bubble_fraction,
+                                     pipeline_permute_bytes,
+                                     validate_pipeline)
+    validate_pipeline(n_stages=n_stages, microbatches=microbatches,
+                      n_super=cfg.n_super, batch=global_batch,
+                      n_data=n_data)
+    act = 2 if cfg.dtype == "bfloat16" else 4
+    total = cfg.param_count()
+    rest = replace(cfg, n_layers=0).param_count()   # embed/head/frontend
+    b = global_batch // microbatches // n_data
+    permute = pipeline_permute_bytes(b, seq_len, cfg.d_model,
+                                     n_stages=n_stages,
+                                     microbatches=microbatches,
+                                     itemsize=act)
+    return {
+        "n_stages": n_stages,
+        "microbatches": microbatches,
+        "stage_param_bytes": (total - rest) * act // n_stages,
+        "replicated_param_bytes": rest * act,
+        "stage_activation_bytes": microbatches * b * seq_len
+                                  * cfg.d_model * act,
+        "bubble_fraction": pipeline_bubble_fraction(n_stages, microbatches),
+        "permute": permute,
+    }
 
 
 def naive_bytes(graph: Graph, shapes, dtypes) -> int:

@@ -8,7 +8,6 @@ paper's central flexibility claim.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax.numpy as jnp
 import numpy as np

@@ -13,8 +13,8 @@ Each operator declares:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Callable
 
 import jax.numpy as jnp
 import jax

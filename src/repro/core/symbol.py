@@ -9,7 +9,7 @@ binding (:meth:`Symbol.bind`) to an executor.
 from __future__ import annotations
 
 import json
-from typing import Any, Sequence
+from typing import Sequence
 
 from .graph import Graph, Node, NodeRef, infer_shapes
 from . import ops as _ops

@@ -7,7 +7,6 @@ with a sidecar ``.idx`` file of u64 offsets so ``read(i)`` is one seek.
 """
 from __future__ import annotations
 
-import io
 import struct
 import zlib
 from pathlib import Path

@@ -16,6 +16,10 @@ The distribution layer of the reproduction (DESIGN.md §5, §7):
 * ``ring`` — sequence-sharded exact attention as a rotating k/v
   collective-permute schedule with a reverse-ring ``custom_vjp``
   (DESIGN.md §8), plus its analytic permute-byte model;
+* ``pipeline`` — the "stage" mesh axis: layer-contiguous super-block
+  groups with a 1F1B micro-batch schedule, collective-permute activation
+  hand-offs and a reverse-schedule ``custom_vjp`` (DESIGN.md §10), plus
+  its analytic bubble/permute-byte models;
 * ``compat`` — backfills ``jax.set_mesh`` / ``jax.shard_map`` on older jax
   (imported first, for its side effects).
 
@@ -43,6 +47,9 @@ from .bucketing import (DEFAULT_BUCKET_BYTES, Bucket, BucketPlan,
 from .collectives import gradient_sync, worker_axes
 from .partition import (batch_pspecs, cache_pspecs, make_shardings,
                         param_pspecs)
+from .pipeline import (PipelineSpec, pipeline_bubble_fraction,
+                       pipeline_permute_bytes, pipeline_stack, stage_pspecs,
+                       validate_pipeline)
 from .ring import RingSpec, contributing_steps, ring_attention, \
     ring_permute_bytes
 
@@ -52,6 +59,8 @@ __all__ = [
     "Bucket", "BucketPlan", "DEFAULT_BUCKET_BYTES", "leaf_nbytes",
     "overlap_taps",
     "param_pspecs", "batch_pspecs", "cache_pspecs", "make_shardings",
+    "PipelineSpec", "pipeline_bubble_fraction", "pipeline_permute_bytes",
+    "pipeline_stack", "stage_pspecs", "validate_pipeline",
     "RingSpec", "contributing_steps", "ring_attention",
     "ring_permute_bytes",
 ]

@@ -40,12 +40,37 @@ Worked example — the spec-resolution core, independent of any devices
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .compat import current_mesh
+
+# trace-time switch: inside a fully-manual shard_map body (e.g. the
+# pipeline schedule, dist/pipeline.py) there is no partitioner to honour
+# sharding constraints — `suppressed()` turns ann/ann_first_fit into
+# identities for everything traced under it
+_SUPPRESS = [False]
+
+
+@contextlib.contextmanager
+def suppressed():
+    """Trace-time context: annotations become identities (DESIGN.md §10)."""
+    _SUPPRESS.append(True)
+    try:
+        yield
+    finally:
+        _SUPPRESS.pop()
+
+
+def annotations_suppressed() -> bool:
+    """True while tracing under :func:`suppressed` — code that builds its
+    own nested ``shard_map`` (e.g. the MoE grouped dispatch) must fall
+    back to its local body inside a fully-manual region, where the batch
+    axes are already per-device."""
+    return _SUPPRESS[-1]
 
 
 class _Batch:
@@ -131,7 +156,7 @@ def ann(x, *spec):
     "explicitly not sharded here").
     """
     m = current_mesh()
-    if m is None or m.size == 1:
+    if m is None or m.size == 1 or _SUPPRESS[-1]:
         return x
     p = _resolve(spec, x.shape, tuple(m.axis_names), dict(m.shape))
     return jax.lax.with_sharding_constraint(x, NamedSharding(m, p))
@@ -141,7 +166,7 @@ def ann_first_fit(x, *specs):
     """Apply the first spec that divides ``x`` exactly; if none does, the
     last spec is applied with best-effort axis dropping."""
     m = current_mesh()
-    if m is None or m.size == 1:
+    if m is None or m.size == 1 or _SUPPRESS[-1]:
         return x
     names, sizes = tuple(m.axis_names), dict(m.shape)
     for spec in specs[:-1]:

@@ -88,15 +88,23 @@ def _path_keys(path):
     return [k.key for k in path if isinstance(k, DictKey)]
 
 
-def param_pspecs(cfg, params, mesh):
+def param_pspecs(cfg, params, mesh, stage_axis: str | None = None):
     """PartitionSpec pytree matching ``params`` (arrays or
-    ShapeDtypeStructs), every sharded dim guaranteed to divide."""
+    ShapeDtypeStructs), every sharded dim guaranteed to divide.
+
+    ``stage_axis``: pipeline parallelism (DESIGN.md §10) — the leading
+    scan dim of ``blocks`` leaves is sharded over this mesh axis instead
+    of staying unsharded, placing layer-contiguous super-block groups on
+    each pipeline stage (``dist.pipeline.stage_pspecs`` is the public
+    wrapper).  As everywhere, a non-dividing axis is dropped.
+    """
     names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
 
     def rule(path, leaf):
         keys = _path_keys(path)
         name = keys[-1] if keys else ""
-        stacked = any(k in ("blocks", "encoder") for k in keys[:-1])
+        in_blocks = any(k == "blocks" for k in keys[:-1])
+        stacked = in_blocks or any(k == "encoder" for k in keys[:-1])
         shape = tuple(leaf.shape)
         base_ndim = len(shape) - (1 if stacked else 0)
         if name in ("wg", "wu", "wd") and "moe" in keys:
@@ -106,7 +114,8 @@ def param_pspecs(cfg, params, mesh):
         if entries is None or len(entries) != base_ndim:
             entries = _generic(base_ndim)
         if stacked:
-            entries = (None,) + tuple(entries)
+            lead = stage_axis if (stage_axis and in_blocks) else None
+            entries = (lead,) + tuple(entries)
         return _resolve(entries, shape, names, sizes)
 
     return tree_map_with_path(rule, params)

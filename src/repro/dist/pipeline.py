@@ -1,0 +1,381 @@
+"""Pipeline parallelism over the super-block stack (DESIGN.md §10).
+
+The third parallelism axis of the reproduction, after data (PR 1/2) and
+sequence (PR 3): a ``"stage"`` mesh axis carries layer-contiguous groups
+of super-blocks (the ``lax.scan`` stack is already stage-shaped — shard
+its leading scan dim and each stage holds ``n_super / pp`` super-blocks),
+and microbatches stream through the stages on a 1F1B fill–drain schedule
+spelled as ``collective_permute`` activation hand-offs between adjacent
+stages.  This is the on-mesh counterpart of the device-placement layer
+split TensorFlow's white paper motivates (Abadi et al., 2016) and of the
+paper's own §3/§4 claim that one dependency-engine abstraction covers
+heterogeneous topologies.
+
+Schedule (forward): ``T = M + pp - 1`` ticks.  At tick ``t`` stage ``s``
+runs microbatch ``m = t - s`` (when ``0 <= m < M``); between ticks the
+stage output permutes one hop down the stage ring — ``T - 1`` permutes
+of one microbatch activation each.  The idle corner ticks are the bubble:
+``pipeline_bubble_fraction = (pp - 1) / (pp - 1 + M)``.
+
+Backward is a ``jax.custom_vjp`` running the schedule in *reverse*:
+activation cotangents enter at the last stage and permute backward hop
+by hop while each stage recomputes its block group from the saved stage
+*inputs* (O(M·b·S·D) residuals per stage — the remat discipline of §3.1
+applied at the stage boundary) and accumulates its local parameter
+gradients.  Parameter grads reduce over the data axes *inside* the
+backward body — never over ``stage``: each stage owns its layer slice
+(which is why ``gradient_sync``'s worker axes exclude ``stage`` and the
+bucketed overlap taps skip the block stack under pp — DESIGN.md §10).
+
+``pipeline_permute_bytes`` is the analytic per-device collective-permute
+byte model mirroring ``ring_permute_bytes``;
+``benchmarks/bench_pipeline.py`` cross-validates it against the compiled
+HLO exactly and gates pp∈{1,2,4} loss/grad parity.
+
+The stage bodies run under a fully-manual ``shard_map`` (the partial-auto
+partitioner is not reliable on the jax this container bakes in), so
+sharding annotations inside the stage computation are suppressed
+(``annotate.suppressed``) — model-axis tensor parallelism inside a stage
+is future work; pp composes with data parallelism today.
+
+Worked example (pure schedule math — runs anywhere)::
+
+    >>> pipeline_bubble_fraction(4, 12)
+    0.2
+    >>> m = pipeline_permute_bytes(2, 64, 128, n_stages=4, microbatches=8,
+    ...                            itemsize=4)
+    >>> m["fwd_permutes"], m["fwd_total"] == 10 * 2 * 64 * 128 * 4
+    (10, True)
+    >>> m["grad_total"] == 2 * m["fwd_total"]
+    True
+    >>> pipeline_permute_bytes(2, 64, 128, n_stages=1,
+    ...                        microbatches=8)["grad_total"]
+    0
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import compat
+from .annotate import BATCH, DATA_AXES, _resolve, suppressed
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """Static (hashable) configuration of one pipelined stack call."""
+    n_stages: int
+    microbatches: int
+    axis: str = "stage"
+    data_axes: tuple[str, ...] = ()
+    n_data: int = 1
+
+    @property
+    def ticks(self) -> int:
+        return self.microbatches + self.n_stages - 1
+
+
+# ---------------------------------------------------------------------------
+# analytic models (cross-validated by benchmarks/bench_pipeline.py)
+
+def pipeline_bubble_fraction(n_stages: int, microbatches: int) -> float:
+    """Idle fraction of the stage×tick grid, per direction: ``pp - 1`` of
+    the ``M + pp - 1`` ticks on every stage are fill/drain bubble."""
+    if n_stages < 1 or microbatches < 1:
+        raise ValueError(f"need n_stages >= 1 and microbatches >= 1, got "
+                         f"{n_stages}, {microbatches}")
+    return (n_stages - 1) / (n_stages - 1 + microbatches)
+
+
+def pipeline_permute_bytes(b: int, S: int, D: int, *, n_stages: int,
+                           microbatches: int, itemsize: int = 2) -> dict:
+    """Analytic per-device collective-permute bytes of one pipelined stack.
+
+    ``b`` is the per-device microbatch rows: ``global_batch / microbatches
+    / (product of data-axis shards)``.  Forward permutes the ``(b, S, D)``
+    activation once per tick except the last — ``M + pp - 2`` hops; the
+    reverse schedule permutes the activation cotangent the same number of
+    hops.  ``n_stages == 1`` degenerates to zero permutes (the sequential
+    fallback).  Cross-validated against compiled HLO exactly by
+    ``benchmarks/bench_pipeline.py``.
+    """
+    payload = b * S * D * itemsize
+    hops = 0 if n_stages == 1 else microbatches + n_stages - 2
+    fwd = hops * payload
+    return {
+        "payload_bytes": payload,
+        "fwd_permutes": hops,
+        "bwd_permutes": hops,
+        "fwd_total": fwd,
+        "bwd_total": fwd,
+        "grad_total": 2 * fwd,
+    }
+
+
+def validate_pipeline(*, n_stages: int, microbatches: int,
+                      n_super: int | None = None, batch: int | None = None,
+                      n_data: int = 1, seq_shard: bool = False) -> None:
+    """Raise ValueError for configurations the schedule cannot run.
+
+    ``n_data``: product of the mesh's data axes.  Unlike the rest of the
+    codebase, where a non-dividing axis degrades to replicated safely,
+    the pipeline body runs fully-manual: a dropped data axis would make
+    every data shard compute the full microbatch while the backward still
+    psums block grads over ``data`` — silently ``n_data``-times-too-large
+    gradients — so indivisibility is an error here, never a fallback.
+    """
+    if n_stages < 1:
+        raise ValueError(f"pp_stages must be >= 1, got {n_stages}")
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+    if n_super is not None and n_super % n_stages:
+        raise ValueError(
+            f"n_super={n_super} super-blocks do not split into "
+            f"pp_stages={n_stages} layer-contiguous stage groups; pick a "
+            f"stage count dividing the stack depth")
+    if batch is not None and batch % microbatches:
+        raise ValueError(
+            f"global batch {batch} not divisible by "
+            f"microbatches={microbatches}")
+    if batch is not None and (batch // microbatches) % n_data:
+        raise ValueError(
+            f"per-microbatch batch {batch}//{microbatches}="
+            f"{batch // microbatches} not divisible by the data-axis "
+            f"product {n_data}; inside the fully-manual stage region a "
+            f"dropped data axis would corrupt block gradients "
+            f"(DESIGN.md §10), so pick a dividing microbatch count")
+    if seq_shard and n_stages > 1:
+        raise ValueError(
+            "pp_stages > 1 does not compose with PerfFlags.seq_shard: the "
+            "stage schedule runs fully-manual over the mesh, which excludes "
+            "the ring path's own shard_map (DESIGN.md §10); drop one")
+
+
+def stage_pspecs(cfg, params, mesh, axis: str = "stage"):
+    """Partition rules for pipeline-parallel params: the stacked scan dim
+    of ``blocks`` leaves is sharded over the ``stage`` mesh axis (each
+    stage owns a layer-contiguous group of super-blocks); everything else
+    follows ``param_pspecs`` unchanged."""
+    from .partition import param_pspecs
+    return param_pspecs(cfg, params, mesh, stage_axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# the schedule (per-device bodies; custom_vjp at the global boundary)
+
+def _fwd_body(spec: PipelineSpec, stage_fn, params_local, xm):
+    """Forward 1F1B fill–drain on one device.  ``xm``: (M, b, S, D) local
+    microbatches; ``params_local``: this stage's super-block slice.
+    Returns (out (M, b, S, D) — the last stage's outputs, replicated over
+    ``stage`` via psum; aux scalars summed over stage×data; saved stage
+    inputs (1, M, b, S, D) — the backward residuals)."""
+    s = jax.lax.axis_index(spec.axis)
+    M, n = spec.microbatches, spec.n_stages
+    first = s == 0
+    last = s == n - 1
+    buf = jnp.zeros(xm.shape[1:], xm.dtype)
+    outs = jnp.zeros_like(xm)
+    saved = jnp.zeros_like(xm)
+    aux_tot = None
+    perm = [(i, i + 1) for i in range(n - 1)]
+    for t in range(spec.ticks):
+        m = t - s                                   # traced (device-varying)
+        active = (m >= 0) & (m < M)
+        mc = jnp.clip(m, 0, M - 1)
+        inject = xm[t] if t < M else jnp.zeros_like(buf)
+        cur = jnp.where(first, inject, buf)
+        saved = jnp.where(
+            active, jax.lax.dynamic_update_index_in_dim(saved, cur, mc, 0),
+            saved)
+        y, aux = stage_fn(params_local, cur)
+        aux = jax.tree.map(lambda a: jnp.where(active, a, 0.0), aux)
+        aux_tot = aux if aux_tot is None else jax.tree.map(
+            jnp.add, aux_tot, aux)
+        outs = jnp.where(
+            active & last, jax.lax.dynamic_update_index_in_dim(outs, y, mc, 0),
+            outs)
+        if t < spec.ticks - 1:
+            # hand the stage output one hop down the stage ring; the next
+            # tick's compute is independent, so the scheduler can overlap
+            buf = jax.lax.ppermute(jnp.where(active, y, 0.0), spec.axis,
+                                   perm)
+    out = jax.lax.psum(outs, spec.axis)             # nonzero on last stage
+    aux_tot = jax.tree.map(
+        lambda a: jax.lax.psum(a, (spec.axis,) + spec.data_axes), aux_tot)
+    return out, aux_tot, saved[None]
+
+
+def _bwd_body(spec: PipelineSpec, stage_fn, params_local, saved, dy, daux):
+    """Reverse schedule on one device: cotangents enter at the last stage
+    and permute backward while each stage recomputes its block group from
+    the saved inputs (remat) and accumulates local param grads (f32)."""
+    s = jax.lax.axis_index(spec.axis)
+    M, n = spec.microbatches, spec.n_stages
+    first = s == 0
+    last = s == n - 1
+    saved = saved[0]                                 # (M, b, S, D)
+    dbuf = jnp.zeros(dy.shape[1:], dy.dtype)
+    dx = jnp.zeros_like(dy)
+    dparams = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                           params_local)
+    perm = [(i, i - 1) for i in range(1, n)]
+    for t in reversed(range(spec.ticks)):
+        m = t - s
+        active = (m >= 0) & (m < M)
+        mc = jnp.clip(m, 0, M - 1)
+        x_in = jax.lax.dynamic_index_in_dim(saved, mc, 0, keepdims=False)
+        d_out = jnp.where(last,
+                          jax.lax.dynamic_index_in_dim(dy, mc, 0,
+                                                       keepdims=False),
+                          dbuf)
+        d_out = jnp.where(active, d_out, 0.0)
+        daux_m = jax.tree.map(lambda a: jnp.where(active, a, 0.0), daux)
+        _, pullback = jax.vjp(stage_fn, params_local, x_in)
+        dp, dxi = pullback((d_out, daux_m))
+        dparams = jax.tree.map(
+            lambda acc, g: acc + jnp.where(active, g, 0.0).astype(acc.dtype),
+            dparams, dp)
+        dx = jnp.where(
+            first & active,
+            jax.lax.dynamic_update_index_in_dim(dx, dxi.astype(dx.dtype),
+                                                mc, 0),
+            dx)
+        if t > 0:
+            dbuf = jax.lax.ppermute(jnp.where(active, dxi, 0.0), spec.axis,
+                                    perm)
+    if spec.data_axes:
+        # grads reduce over the data axes only — never over stage: each
+        # stage owns its layer-contiguous param slice (DESIGN.md §10)
+        dparams = jax.tree.map(
+            lambda g: jax.lax.psum(g, spec.data_axes), dparams)
+    dparams = jax.tree.map(lambda g, p: g.astype(p.dtype), dparams,
+                           params_local)
+    dx = jax.lax.psum(dx, spec.axis)                 # nonzero on stage 0
+    return dparams, dx
+
+
+def _pipeline_specs(spec: PipelineSpec, stage_params, x_mb, mesh):
+    """(param, microbatch, saved) in/out spec pytrees for the shard_map."""
+    names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
+
+    def pleaf(leaf):
+        ent = (spec.axis,) + (None,) * (len(leaf.shape) - 1)
+        return _resolve(ent, leaf.shape, names, sizes)
+
+    p_specs = jax.tree.map(pleaf, stage_params)
+    x_ent = (None, BATCH) + (None,) * (x_mb.ndim - 2)
+    x_spec = _resolve(x_ent, x_mb.shape, names, sizes)
+    save_spec = _resolve((spec.axis,) + x_ent,
+                         (spec.n_stages,) + x_mb.shape, names, sizes)
+    return p_specs, x_spec, save_spec
+
+
+def _fwd_call(spec: PipelineSpec, stage_fn, stage_params, x_mb):
+    mesh = compat.current_mesh()
+    p_specs, x_spec, save_spec = _pipeline_specs(spec, stage_params, x_mb,
+                                                 mesh)
+    from jax.sharding import PartitionSpec as P
+    aux_spec = jax.tree.map(lambda _: P(),
+                            jax.eval_shape(stage_fn,
+                                           stage_params, x_mb[0])[1])
+
+    def body(p, xm):
+        with suppressed():
+            return _fwd_body(spec, stage_fn, p, xm)
+
+    f = compat.shard_map(body, mesh, in_specs=(p_specs, x_spec),
+                         out_specs=(x_spec, aux_spec, save_spec))
+    return f(stage_params, x_mb)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pipeline(spec: PipelineSpec, stage_fn, stage_params, x_mb):
+    out, aux, _ = _fwd_call(spec, stage_fn, stage_params, x_mb)
+    return out, aux
+
+
+def _pipeline_fwd(spec, stage_fn, stage_params, x_mb):
+    out, aux, saved = _fwd_call(spec, stage_fn, stage_params, x_mb)
+    return (out, aux), (stage_params, saved)
+
+
+def _pipeline_bwd(spec, stage_fn, res, cot):
+    stage_params, saved = res
+    dy, daux = cot
+    mesh = compat.current_mesh()
+    p_specs, x_spec, save_spec = _pipeline_specs(spec, stage_params, dy,
+                                                 mesh)
+    from jax.sharding import PartitionSpec as P
+    aux_spec = jax.tree.map(lambda _: P(), daux)
+
+    def body(p, sv, d, da):
+        with suppressed():
+            return _bwd_body(spec, stage_fn, p, sv, d, da)
+
+    f = compat.shard_map(body, mesh,
+                         in_specs=(p_specs, save_spec, x_spec, aux_spec),
+                         out_specs=(p_specs, x_spec))
+    return f(stage_params, saved, dy, daux)
+
+
+_pipeline.defvjp(_pipeline_fwd, _pipeline_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+
+def pipeline_stack(stage_fn, stage_params, x, *, microbatches: int,
+                   axis: str = "stage", mesh=None):
+    """Run a stacked layer group through the 1F1B stage pipeline.
+
+    ``stage_fn(params_slice, x) -> (y, aux)`` applies one stage's
+    super-block slice to a ``(b, S, D)`` activation; ``aux`` is a pytree
+    of f32 scalars (MoE losses) that is *summed over stages* and *averaged
+    over microbatches and data shards* — matching the unpipelined
+    ``run_stack`` semantics for token-mean auxiliaries.  ``stage_params``
+    leaves carry the leading scan dim, sharded over ``axis`` so each stage
+    holds a layer-contiguous slice.
+
+    Without an ambient mesh (or a 1-sized / absent ``axis``) the schedule
+    degenerates to a sequential microbatch loop over the full stack — the
+    CPU smoke path, and the oracle the mesh tests compare against.
+    Differentiable via the reverse-schedule ``custom_vjp``.
+    """
+    B = x.shape[0]
+    M = microbatches
+    validate_pipeline(n_stages=1, microbatches=M, batch=B)
+    mesh = mesh or compat.current_mesh()
+    n = int(mesh.shape[axis]) if (mesh is not None
+                                  and axis in mesh.axis_names) else 1
+    lead = {int(leaf.shape[0]) for leaf in jax.tree.leaves(stage_params)}
+    if len(lead) != 1:
+        raise ValueError(f"stage_params leaves disagree on the scan dim: "
+                         f"{sorted(lead)}")
+    validate_pipeline(n_stages=n, microbatches=M, n_super=lead.pop(),
+                      batch=B)
+    x_mb = x.reshape((M, B // M) + x.shape[1:])
+    if n == 1:
+        outs, aux = [], None
+        for m in range(M):
+            y, a = stage_fn(stage_params, x_mb[m])
+            outs.append(y)
+            aux = a if aux is None else jax.tree.map(jnp.add, aux, a)
+        y = jnp.concatenate(outs, 0) if M > 1 else outs[0]
+        return y, jax.tree.map(lambda t: t / M, aux)
+    data_axes = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    n_data = 1
+    for a in data_axes:
+        n_data *= int(mesh.shape[a])
+    # indivisible batches are an error here, not a replication fallback:
+    # the backward psums block grads over the data axes
+    validate_pipeline(n_stages=n, microbatches=M, batch=B, n_data=n_data)
+    spec = PipelineSpec(n_stages=n, microbatches=M, axis=axis,
+                        data_axes=data_axes, n_data=n_data)
+    y, aux = _pipeline(spec, stage_fn, stage_params, x_mb)
+    y = y.reshape((B,) + x.shape[1:])
+    # psum over stage+data made aux a raw sum; restore the token-mean scale
+    aux = jax.tree.map(lambda t: t / (spec.n_data * M), aux)
+    return y, aux

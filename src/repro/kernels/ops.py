@@ -6,7 +6,6 @@ the performance target.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 

@@ -38,9 +38,9 @@ from repro.configs import ARCH_IDS, LONG_CONTEXT_ARCHS, get_config
 from repro.dist import (batch_pspecs, cache_pspecs, make_shardings,
                         param_pspecs)
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (init_opt_state, input_specs, make_decode_step,
+from repro.launch.steps import (input_specs, make_decode_step,
                                 make_prefill_step, make_train_step)
-from repro.models import INPUT_SHAPES, get_model
+from repro.models import INPUT_SHAPES
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -220,7 +220,8 @@ def probe_cfg(cfg, n_super):
 
 def run_pair(arch: str, shape_name: str, multi_pod: bool,
              probes: bool = True, verbose: bool = True,
-             seq_shard: bool = False) -> dict:
+             seq_shard: bool = False, pp_stages: int = 1,
+             microbatches: int = 1) -> dict:
     long_ctx = shape_name.startswith("long_500k")
     if long_ctx and arch not in LONG_CONTEXT_ARCHS and not seq_shard:
         return {"arch": arch, "shape": shape_name, "status": "SKIP",
@@ -256,6 +257,22 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
             "paged_bytes_mixed_mean": half["bytes"],
             "padded_over_true_mixed": round(dense / max(half["bytes"], 1), 2),
         }
+    if pp_stages > 1 and shp.kind == "train":
+        # per-stage param/activation memplan of the 1F1B pipeline
+        # (DESIGN.md §10): what each "stage" shard holds, the saved
+        # microbatch residuals, and the activation hand-off bytes
+        from repro.core.memplan import pipeline_stage_bytes
+        n_data = (16 // pp_stages) * (2 if multi_pod else 1)
+        rec["pipeline"] = pipeline_stage_bytes(
+            cfg, n_stages=pp_stages, microbatches=microbatches,
+            global_batch=shp.global_batch, seq_len=shp.seq_len,
+            n_data=n_data)
+        if verbose:
+            p = rec["pipeline"]
+            print(f"  [pipeline pp={pp_stages} M={microbatches}] "
+                  f"stage params {p['stage_param_bytes']/2**30:.2f} GiB "
+                  f"saved acts {p['stage_activation_bytes']/2**30:.2f} GiB "
+                  f"bubble {p['bubble_fraction']:.3f}")
     from repro.perf_flags import FLAGS, set_flags
     prev_flags = (FLAGS.seq_shard, FLAGS.attn_impl)
     if seq_shard:
@@ -309,6 +326,12 @@ def main():
                     help="sequence-sharded batches + ring attention "
                          "(PerfFlags.seq_shard; unlocks long_500k for "
                          "full-attention archs — DESIGN.md §8)")
+    ap.add_argument("--pp-stages", type=int, default=1,
+                    help="report the per-stage pipeline memplan (param/"
+                         "activation bytes per 'stage' shard; DESIGN.md "
+                         "§10) for train shapes")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="micro-batch count for the --pp-stages memplan")
     ap.add_argument("--force", action="store_true",
                     help="recompute even if a result JSON exists")
     args = ap.parse_args()
@@ -335,7 +358,9 @@ def main():
             # probes only needed on the single-pod mesh (roofline table)
             rec = run_pair(arch, shape, mp,
                            probes=(not args.no_probes) and not mp,
-                           seq_shard=args.seq_shard)
+                           seq_shard=args.seq_shard,
+                           pp_stages=args.pp_stages,
+                           microbatches=args.microbatches)
             save(rec)
             failures += rec["status"] == "FAIL"
             if rec["status"] == "SKIP":

@@ -9,9 +9,22 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, pp_stages: int = 1):
+    """``pp_stages > 1`` carves a leading ``stage`` axis out of the data
+    axis (DESIGN.md §10): chips-per-pod stays 256, the gradient-worker
+    count shrinks to ``16 // pp_stages`` — the stage axis carries layer
+    groups, not replicas."""
+    if pp_stages < 1 or 16 % pp_stages:
+        raise ValueError(f"pp_stages must divide the 16-way data axis, "
+                         f"got {pp_stages}")
+    shape = (16 // pp_stages, 16)
+    axes = ("data", "model")
+    if pp_stages > 1:
+        shape = (pp_stages,) + shape
+        axes = ("stage",) + axes
+    if multi_pod:
+        shape = (2,) + shape
+        axes = ("pod",) + axes
     return jax.make_mesh(shape, axes)
 
 

@@ -4,13 +4,11 @@ decode_step — plus their abstract input specs for lowering.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import INPUT_SHAPES, ArchConfig, get_model
-from repro.models import transformer as T
 
 
 # ---------------------------------------------------------------------------

@@ -46,6 +46,12 @@ def main():
                     default="auto",
                     help="attention implementation selection "
                          "(PerfFlags.attn_impl)")
+    ap.add_argument("--pp-stages", type=int, default=1,
+                    help="pipeline stages over the super-block stack "
+                         "(the 'stage' mesh axis; DESIGN.md §10)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="micro-batches streamed through the 1F1B "
+                         "pipeline schedule (--pp-stages)")
     args = ap.parse_args()
 
     if args.seq_shard or args.attn_impl != "auto":
@@ -59,7 +65,8 @@ def main():
 
     if args.mesh != "host":
         from repro.launch.mesh import make_production_mesh
-        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi",
+                                    pp_stages=args.pp_stages)
         ctx = jax.set_mesh(mesh)
     else:
         import contextlib
@@ -69,7 +76,9 @@ def main():
                        warmup_steps=max(args.steps // 10, 1),
                        checkpoint_every=args.checkpoint_every,
                        grad_clip=5.0, overlap=args.overlap,
-                       bucket_mb=args.bucket_mb)
+                       bucket_mb=args.bucket_mb,
+                       pp_stages=args.pp_stages,
+                       microbatches=args.microbatches)
     data = PrefetchIterator(
         SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps),
         depth=4)

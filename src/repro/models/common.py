@@ -8,7 +8,7 @@ the lowered HLO stays small at 80+ layers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Literal
 
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ well-optimized big operations").
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np

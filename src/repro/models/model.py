@@ -1,7 +1,6 @@
 """Model facade: functional entry points bound to an ArchConfig."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -88,9 +88,15 @@ def _combine_local(y, flat_e, flat_t, flat_w, s_idx, keep, S):
 
 def _data_shard_map(f, n_in, n_out, batch_dim: int = 0, batch_size=None):
     """Run f under shard_map over the data axes (manual) with "model" left
-    auto; identity passthrough when no mesh is active (CPU tests) or when
+    auto; identity passthrough when no mesh is active (CPU tests), when
     the batch dim does not divide the data axes (e.g. batch-1 long-context
-    decode — the local code is then simply global)."""
+    decode — the local code is then simply global), or inside an enclosing
+    fully-manual region (the pipeline stage body, DESIGN.md §10 — the
+    batch axes are already per-device there, so f's local body is exactly
+    what should run)."""
+    from repro.dist.annotate import annotations_suppressed
+    if annotations_suppressed():
+        return f
     axes, sizes = _mesh_axes()
     dp = tuple(a for a in ("pod", "data") if a in axes)
     if not dp:

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.dist.annotate import BATCH, ann, ann_first_fit
 

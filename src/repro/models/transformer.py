@@ -14,7 +14,6 @@ Entry points:
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ from repro.dist.annotate import BATCH, ann
 from .common import ArchConfig, LayerSpec
 from .layers import (attn_block, attn_block_decode, attn_block_decode_paged,
                      attn_project_qkv, apply_rope, cross_attn_block,
-                     gqa_attention, mlp_block, paged_context_attention,
+                     mlp_block, paged_context_attention,
                      rmsnorm, rope_freqs)
 from .moe import moe_block
 from .ssm import mamba_block
@@ -343,8 +342,71 @@ def run_stack(params, x, cfg: ArchConfig, enc_kvs=None, positions=None,
     return x, caches, {"load_balance": lb, "router_z": rz}
 
 
+def _pipeline_stage_fn(cfg: ArchConfig):
+    """One pipeline stage: apply this stage's super-block slice.
+
+    Returns ``stage_fn(blocks_slice, x) -> (x, aux)`` where ``aux`` holds
+    the MoE scalar losses of the slice (summed over its super-blocks).
+    The per-super-block body is the train-path subset of ``run_stack``'s
+    (no cache collection, no enc-dec cross-attention).
+    """
+    pattern = cfg.pattern
+
+    def body(carry, bp):
+        x, lb, rz = carry
+        # sequence-parallel between blocks, like run_stack; identity
+        # inside the stage shard_map (annotations suppressed) but live on
+        # the pp-requested-without-stage-axis GSPMD fallback
+        x = ann(x, BATCH, "model", None)
+        for i, spec in enumerate(pattern):
+            x, _, aux = apply_block(bp[f"p{i}"], x, cfg, spec)
+            lb = lb + aux["load_balance"]
+            rz = rz + aux["router_z"]
+        return (x, lb, rz), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    def stage_fn(blocks_local, x):
+        n_local = jax.tree.leaves(blocks_local)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        if n_local <= 4:
+            for i in range(n_local):
+                carry, _ = body(carry,
+                                jax.tree.map(lambda a: a[i], blocks_local))
+        else:
+            carry, _ = jax.lax.scan(body, carry, blocks_local)
+        x, lb, rz = carry
+        return x, {"load_balance": lb, "router_z": rz}
+
+    return stage_fn
+
+
+def run_stack_pipelined(params, x, cfg: ArchConfig):
+    """The super-block stack as per-stage scans under the 1F1B pipeline
+    (DESIGN.md §10): each ``stage`` mesh shard holds a layer-contiguous
+    slice of the stacked block params and microbatches stream through
+    ``dist.pipeline.pipeline_stack``.  Train path only: caches and
+    enc-dec cross-attention are not carried.  Returns (x, aux_totals)."""
+    from repro.dist.pipeline import pipeline_stack, validate_pipeline
+    from repro.perf_flags import FLAGS
+    if cfg.encoder_layers:
+        raise ValueError(
+            "pipeline parallelism does not support enc-dec archs: the "
+            "decoder's cross-attention KV is per-super-block state the "
+            "stage hand-off does not carry (DESIGN.md §10)")
+    validate_pipeline(n_stages=FLAGS.pp_stages,
+                      microbatches=FLAGS.microbatches, n_super=cfg.n_super,
+                      batch=x.shape[0], seq_shard=FLAGS.seq_shard)
+    stage_fn = _pipeline_stage_fn(cfg)
+    x, aux = pipeline_stack(stage_fn, params["blocks"], x,
+                            microbatches=FLAGS.microbatches)
+    return x, aux
+
+
 def forward_loss(params, batch, cfg: ArchConfig):
     """Next-token CE loss. batch: tokens (B,S) [+ patches/frames]."""
+    from repro.perf_flags import FLAGS
     tokens = batch["tokens"]
     x = embed_tokens(params, tokens, cfg)
     prefix = 0
@@ -358,7 +420,13 @@ def forward_loss(params, batch, cfg: ArchConfig):
         x = jnp.concatenate([pre, x], axis=1)
         prefix = pre.shape[1]
 
-    x, _, aux = run_stack(params, x, cfg, enc_kvs=enc_kvs)
+    if FLAGS.pp_stages > 1:
+        # microbatches alone (pp_stages == 1) are a no-op: without a
+        # stage axis the schedule is the plain stack, so keep run_stack's
+        # layout annotations and enc-dec support
+        x, aux = run_stack_pipelined(params, x, cfg)
+    else:
+        x, _, aux = run_stack(params, x, cfg, enc_kvs=enc_kvs)
     loss = chunked_ce_loss(params, x[:, prefix:], tokens, cfg)
     total = loss + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
     return total, {"ce": loss, **aux}

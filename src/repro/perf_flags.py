@@ -59,6 +59,12 @@ class PerfFlags:
     # seq_shard is on and the mesh's "model" axis divides S; "ring" forces
     # the ring schedule (dist/ring.py); "dense" never rings
     attn_impl: str = "auto"
+    # pipeline parallelism (DESIGN.md §10): number of "stage" mesh-axis
+    # groups the super-block stack splits into (1 = off) and the number of
+    # micro-batches streamed through the 1F1B schedule.  Selected by
+    # TrainConfig(pp_stages, microbatches) / launch --pp-stages.
+    pp_stages: int = 1
+    microbatches: int = 1
 
 
 FLAGS = PerfFlags()

@@ -14,8 +14,8 @@ Two backends:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator
+from dataclasses import dataclass
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,12 @@ class TrainConfig:
     # overlap=False; only the collective schedule changes.
     overlap: bool = False
     bucket_mb: float = 4.0
+    # pipeline parallelism over the super-block stack (DESIGN.md §10):
+    # number of "stage" mesh-axis groups (1 = off) and micro-batches
+    # streamed through the 1F1B schedule.  Selects PerfFlags.pp_stages /
+    # .microbatches; validated against the arch in Trainer.__init__.
+    pp_stages: int = 1
+    microbatches: int = 1
 
 
 class Trainer:
@@ -51,6 +57,15 @@ class Trainer:
                  optimizer: Optimizer | None = None):
         self.cfg = cfg
         self.tcfg = tcfg
+        if tcfg.pp_stages > 1 or tcfg.microbatches > 1:
+            from repro.dist.pipeline import validate_pipeline
+            from repro.perf_flags import FLAGS, set_flags
+            validate_pipeline(n_stages=tcfg.pp_stages,
+                              microbatches=tcfg.microbatches,
+                              n_super=cfg.n_super,
+                              seq_shard=FLAGS.seq_shard)
+            set_flags(pp_stages=tcfg.pp_stages,
+                      microbatches=tcfg.microbatches)
         self.model = get_model(cfg)
         self.optimizer = optimizer or sgd_momentum(
             lr=tcfg.lr, mu=tcfg.mu, weight_decay=tcfg.weight_decay)
@@ -69,12 +84,24 @@ class Trainer:
         overlap = self.tcfg.overlap
         bucket_bytes = max(int(self.tcfg.bucket_mb * 2**20), 1)
 
+        pp = self.tcfg.pp_stages > 1
+
         def loss_fn(params, batch):
             if overlap:
                 # route params through per-bucket custom_vjp taps so each
-                # bucket's gradient reduction is emitted inside backward
+                # bucket's gradient reduction is emitted inside backward.
+                # Under pipeline parallelism the block stack is excluded:
+                # its grads are stage-sharded and already reduced over the
+                # data axes inside the pipeline backward — a replicated
+                # bucket pin would all-gather them over "stage"
+                # (DESIGN.md §10); taps cover the replicated params only.
                 from repro.dist import overlap_taps
-                params = overlap_taps(params, cap_bytes=bucket_bytes)
+                if pp:
+                    rest = {k: v for k, v in params.items() if k != "blocks"}
+                    params = {**overlap_taps(rest, cap_bytes=bucket_bytes),
+                              "blocks": params["blocks"]}
+                else:
+                    params = overlap_taps(params, cap_bytes=bucket_bytes)
             return model.loss(params, batch)
 
         @jax.jit

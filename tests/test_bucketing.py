@@ -120,6 +120,7 @@ def test_unpack_after_lead_reduction():
 # ---------------------------------------------------------------------------
 # gradient_sync mode="bucketed" — numerics on the 2x4x2 dry-run mesh
 
+@pytest.mark.mesh
 def test_bucketed_sync_matches_flat_on_mesh():
     out = run_sub("""
     import jax, jax.numpy as jnp, numpy as np
@@ -197,6 +198,7 @@ def test_trainer_overlap_step_matches_plain():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.mesh
 def test_trainer_overlap_step_on_mesh():
     """The overlap taps' replicated-pin branch under a real multi-device
     mesh: the step must run and match the plain step's loss."""

@@ -1,8 +1,7 @@
 """Dependency engine (MXNet §3.2): mutation ordering, laziness, RNG serialization."""
 import numpy as np
-import pytest
 
-from repro.core import Engine, NDArray, RNG, Tag
+from repro.core import Engine, NDArray, RNG
 
 
 def test_lazy_then_flush():

@@ -1,9 +1,8 @@
 """KVStore (MXNet §2.3, §3.3): aggregation, consistency, two-level bytes."""
 import numpy as np
-import pytest
 
 from repro.core import (Engine, KVStoreDist, KVStoreLocal, NDArray,
-                        reset_default_engine, sgd_updater)
+                        sgd_updater)
 
 
 def test_local_push_aggregates_devices():

@@ -13,7 +13,7 @@ from hypothesis_compat import given, settings, st
 from repro.core import (Activation, FullyConnected, SoftmaxOutput, Variable,
                         reset_default_engine)
 from repro.core.graph import Graph, infer_shapes
-from repro.core.memplan import naive_bytes, plan_graph
+from repro.core.memplan import plan_graph
 from repro.core.symbol import Symbol
 
 
@@ -112,7 +112,6 @@ def random_dag_program(draw):
 @given(random_dag_program())
 @settings(max_examples=25, deadline=None)
 def test_random_dag_all_strategies_agree(prog):
-    from repro.core import ops as _ops
     ops_list, picks = prog
     a, b = Variable("a"), Variable("b")
     vals = [a, b]

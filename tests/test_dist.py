@@ -9,6 +9,7 @@ import pytest
 from mesh_subproc import run_sub
 
 
+@pytest.mark.mesh
 def test_hierarchical_allreduce_matches_flat():
     out = run_sub("""
     import jax, jax.numpy as jnp, numpy as np
@@ -30,6 +31,7 @@ def test_hierarchical_allreduce_matches_flat():
     assert "SYNC_OK" in out
 
 
+@pytest.mark.mesh
 def test_hierarchical_reduces_interpod_bytes():
     """The two-level schedule must move fewer bytes across 'pod' than the
     flat all-reduce (the §3.3 claim, on-mesh)."""
@@ -61,6 +63,7 @@ def test_hierarchical_reduces_interpod_bytes():
     assert "BYTES_OK" in out
 
 
+@pytest.mark.mesh
 def test_param_pspecs_cover_tree_and_divide():
     out = run_sub("""
     import jax
@@ -88,6 +91,7 @@ def test_param_pspecs_cover_tree_and_divide():
     assert "SPECS_OK" in out
 
 
+@pytest.mark.mesh
 def test_dryrun_single_pair_tiny():
     """The dry-run path end-to-end on a reduced arch (16 fake devices)."""
     out = run_sub("""
@@ -115,6 +119,7 @@ def test_dryrun_single_pair_tiny():
     assert "DRYRUN_OK" in out
 
 
+@pytest.mark.mesh
 def test_decode_step_lowering_tiny():
     out = run_sub("""
     import jax

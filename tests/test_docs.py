@@ -18,7 +18,7 @@ _CODE_PATH = re.compile(r"`([\w./-]+/[\w./-]+)`")
 
 DIST_MODULES = ["repro.dist", "repro.dist.annotate", "repro.dist.bucketing",
                 "repro.dist.collectives", "repro.dist.partition",
-                "repro.dist.ring", "repro.dist.compat"]
+                "repro.dist.pipeline", "repro.dist.ring", "repro.dist.compat"]
 
 
 def _referenced_paths():

@@ -1,6 +1,5 @@
 """Unit tests for the dry-run/roofline tooling: the HLO collective parser
 (replica-group accounting) and the probe-composition arithmetic."""
-import numpy as np
 import pytest
 
 from repro.launch.dryrun import _group_size, collective_bytes

@@ -11,6 +11,8 @@ before jax initializes, hence the subprocess.
 """
 import numpy as np
 
+import pytest
+
 from mesh_subproc import run_sub
 from repro.core import KVStoreDist
 
@@ -32,6 +34,7 @@ def test_analytic_two_level_ratio():
     assert kv.bytes_l1 // kv.bytes_l2 == DEVS_PER_MACHINE
 
 
+@pytest.mark.mesh
 def test_hlo_matches_analytic_ratio():
     """The compiled hierarchical schedule's cross-pod all-reduce carries
     1/devices_per_machine of the flat schedule's bytes — the same factor

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import LayerSpec, get_model, reduced
+from repro.models import get_model, reduced
 from repro.models.layers import decode_attention, gqa_attention
 from repro.models.ssm import ssd_chunked, ssd_reference
 

@@ -1,7 +1,6 @@
 """Perf-variant flags must preserve numerics (the §Perf hillclimb
 optimizations are only admissible if bit-compatible within tolerance)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -89,6 +89,7 @@ def test_long_500k_prefill_shape_registered():
 # ---------------------------------------------------------------------------
 # mesh subprocess tests (>= 4 sequence shards)
 
+@pytest.mark.mesh
 def test_ring_matches_ref_4_shards_fwd_bwd():
     """ISSUE-3 acceptance: ring fwd+bwd == unsharded ref on a 4-shard
     mesh, full-causal and sliding-window (window crosses chunk bounds)."""
@@ -135,6 +136,7 @@ def test_ring_matches_ref_4_shards_fwd_bwd():
     assert "DIVISIBILITY_OK" in out
 
 
+@pytest.mark.mesh
 def test_ring_pallas_inner_4_shards():
     """The flash kernel (carry mode) as the per-ring-step inner kernel,
     interpret mode, under shard_map + custom_vjp."""
@@ -169,6 +171,7 @@ def test_ring_pallas_inner_4_shards():
     assert "RING_PALLAS_OK" in out
 
 
+@pytest.mark.mesh
 def test_seq_shard_model_loss_and_grads_match():
     """PerfFlags.seq_shard + attn_impl=auto: a reduced dense model's train
     loss and parameter gradients on a (1, 4) mesh equal the no-mesh
@@ -203,6 +206,7 @@ def test_seq_shard_model_loss_and_grads_match():
     assert "SEQ_SHARD_MODEL_OK" in out
 
 
+@pytest.mark.mesh
 def test_ring_hlo_permute_bytes_match_analytic():
     """The analytic permute-byte model equals the compiled HLO exactly
     (fwd and grad), including the windowed early-stop."""
@@ -234,6 +238,7 @@ def test_ring_hlo_permute_bytes_match_analytic():
     assert "RING_BYTES_OK" in out
 
 
+@pytest.mark.mesh
 def test_batch_pspecs_seq_kind():
     out = run_sub("""
     import jax
