@@ -133,6 +133,18 @@ def run(csv: bool = True):
     emit("serving_speedup", round(paged_tok_s / static_tok_s, 2),
          "paged/static decode tok/s")
 
+    # -- per-request latency (informational, never gated: wall-clock
+    #    percentiles swing with machine load like every timing here) -------
+    emit("serving_ttft_p50_ms", round(pst.ttft_p50 * 1e3, 2),
+         "enqueue -> first token (paged engine)")
+    emit("serving_ttft_p99_ms", round(pst.ttft_p99 * 1e3, 2), "")
+    emit("serving_tpot_p50_ms", round(pst.tpot_p50 * 1e3, 3),
+         "per-token decode time after the first")
+    emit("serving_tpot_p99_ms", round(pst.tpot_p99 * 1e3, 3), "")
+    emit("serving_queue_wait_p50_ms", round(pst.queue_wait_p50 * 1e3, 2),
+         "enqueue -> admission to a decode lane")
+    emit("serving_queue_wait_p99_ms", round(pst.queue_wait_p99 * 1e3, 2), "")
+
     # -- parity ------------------------------------------------------------
     mismatches = sum(a != b for a, b in zip(static_out, paged_out))
     emit("serving_token_mismatches", mismatches,

@@ -160,7 +160,20 @@ def main() -> None:
                     help="allowed relative regression for --compare")
     ap.add_argument("--write-baselines", action="store_true",
                     help=f"refresh {BASELINE_DIR} from this run")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record host spans across the benches and write a "
+                         "Perfetto / chrome://tracing JSON.  NOTE: tracing "
+                         "perturbs fig6's executor/eager timing ratios — "
+                         "don't combine with --compare gating")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write the final metrics-registry snapshot "
+                         "(serving latency histograms, engine gauges) "
+                         "as JSONL")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace:
+        obs.enable()
 
     failures = {}
     records = {}
@@ -263,6 +276,13 @@ def main() -> None:
         (outdir / "BENCH_summary.json").write_text(
             json.dumps(summary, indent=1))
         print(f"wrote {len(records) + 1} BENCH_*.json records to {outdir}")
+
+    if args.metrics:
+        obs.get_metrics().dump_jsonl(args.metrics)
+        print(f"metrics: {args.metrics}")
+    if args.trace:
+        obs.export(args.trace)
+        print(f"trace: {args.trace}")
 
     sys.exit(1 if bad else 0)
 

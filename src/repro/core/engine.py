@@ -29,6 +29,8 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.obs import get_metrics, get_recorder
+
 
 class Tag:
     """A schedulable resource (array buffer, RNG, workspace)."""
@@ -64,7 +66,11 @@ class _Op:
 class Engine:
     """Tag-based dependency scheduler with wave execution."""
 
+    _ids = itertools.count()
+
     def __init__(self, record_waves: bool = True):
+        self.eid = next(Engine._ids)
+        self._track = "engine"           # trace track for this engine's ops
         self._seq = itertools.count()
         self._pending: dict[int, _Op] = {}
         self._ready: deque[_Op] = deque()
@@ -130,6 +136,23 @@ class Engine:
             op.dependents.clear()
             op.fn = _DONE
 
+    def _exec(self, op: _Op, wave: int | None = None):
+        """Run one claimed op, spanning it on the default trace recorder
+        (op name, read/write tags, wave index — the paper's dependency-
+        engine execution as a Perfetto timeline)."""
+        rec = get_recorder()
+        if rec.enabled:
+            args = {"reads": [t.name for t in op.reads],
+                    "writes": [t.name for t in op.writes],
+                    "seq": op.seq}
+            if wave is not None:
+                args["wave"] = wave
+            with rec.span(op.name, cat="engine", track=self._track, **args):
+                op.fn()
+        else:
+            op.fn()
+        self._finish(op)
+
     def _run_wave(self) -> int:
         with self._lock:
             # ops executed out-of-wave by a fine-grained wait() may still
@@ -141,11 +164,11 @@ class Engine:
             self._ready.clear()
         if not wave:
             return 0
+        wave_idx = len(self.wave_sizes)
         if self.record_waves:
             self.wave_sizes.append(len(wave))
         for op in wave:  # independent by construction
-            op.fn()
-            self._finish(op)
+            self._exec(op, wave=wave_idx)
         return len(wave)
 
     def wait_all(self):
@@ -201,8 +224,7 @@ class Engine:
             return self.wait(tag)
         # push order is a topological order (deps always have smaller seq)
         for op in sorted(closure, key=lambda o: o.seq):
-            op.fn()
-            self._finish(op)
+            self._exec(op)
 
     # -- introspection ----------------------------------------------------------
     def stats(self) -> dict:
@@ -213,6 +235,28 @@ class Engine:
             "max_wave": max(ws, default=0),
             "mean_wave": (sum(ws) / len(ws)) if ws else 0.0,
         }
+
+    def reset_stats(self) -> None:
+        """Zero this engine's execution record (pending ops unaffected)."""
+        self.wave_sizes.clear()
+        self.ops_executed = 0
+
+    def publish_stats(self, metrics=None) -> dict:
+        """Fold :meth:`stats` into a metrics registry (default: the
+        process-wide one) under ``engine.*``.  Gauges, not counters: each
+        publish reflects THIS engine's current record, so a fresh engine
+        (``reset_default_engine``) publishes fresh numbers instead of
+        accumulating onto a dead instance's."""
+        m = metrics if metrics is not None else get_metrics()
+        s = self.stats()
+        m.gauge("engine.ops_executed").set(s["ops"])
+        m.gauge("engine.waves").set(s["waves"])
+        m.gauge("engine.max_wave").set(s["max_wave"])
+        m.gauge("engine.mean_wave").set(s["mean_wave"])
+        wh = m.histogram("engine.wave_size")
+        for w in self.wave_sizes[wh.count:]:   # only waves not yet observed
+            wh.observe(w)
+        return s
 
 
 _default: Engine | None = None
@@ -226,6 +270,14 @@ def default_engine() -> Engine:
 
 
 def reset_default_engine() -> Engine:
+    """Install a fresh default engine.
+
+    Also drops every ``engine.*`` metric from the process-wide registry:
+    published stats and wave-size samples belong to the engine instance
+    that recorded them, and letting a dead engine's numbers linger is
+    exactly the cross-test staleness this reset exists to prevent.
+    """
     global _default
+    get_metrics().remove_prefix("engine.")
     _default = Engine()
     return _default

@@ -33,6 +33,8 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import get_metrics
+
 from .engine import Engine, default_engine
 from .ndarray import NDArray
 
@@ -99,6 +101,17 @@ class KVStoreLocal:
                          reads=(stored.tag,), writes=(out.tag,),
                          name=f"kv_pull_{key}")
         return out
+
+    def publish_metrics(self, metrics=None) -> None:
+        """Publish byte attribution into a metrics registry (default: the
+        process-wide one): ``kvstore.bytes_pushed`` plus one
+        ``kvstore.bytes_pushed.<key>`` counter per key.  Gauge-free set:
+        counters are assigned, not incremented, so repeated publishes
+        stay idempotent."""
+        m = metrics if metrics is not None else get_metrics()
+        m.counter("kvstore.bytes_pushed").value = self.bytes_pushed
+        for k, nb in self.bytes_pushed_by_key.items():
+            m.counter(f"kvstore.bytes_pushed.{k}").value = nb
 
 
 class KVStoreDist:
@@ -205,3 +218,16 @@ class KVStoreDist:
 
     def version(self, key: str) -> int:
         return self._version[key]
+
+    def publish_metrics(self, metrics=None) -> None:
+        """Publish the two-level byte attribution (§3.3) into a metrics
+        registry: ``kvstore.bytes_l1`` / ``kvstore.bytes_l2`` totals plus
+        per-key counters — the numbers ``bench_dist`` cross-validates
+        against compiled HLO, now visible outside the bench."""
+        m = metrics if metrics is not None else get_metrics()
+        m.counter("kvstore.bytes_l1").value = self.bytes_l1
+        m.counter("kvstore.bytes_l2").value = self.bytes_l2
+        for k, nb in self.bytes_l1_by_key.items():
+            m.counter(f"kvstore.bytes_l1.{k}").value = nb
+        for k, nb in self.bytes_l2_by_key.items():
+            m.counter(f"kvstore.bytes_l2.{k}").value = nb

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
+
 from . import compat
 from .annotate import DATA_AXES
 from .bucketing import DEFAULT_BUCKET_BYTES, BucketPlan
@@ -71,13 +73,17 @@ def _hier_body(n_data):
         # local sum (XLA backends without native reduce-scatter decompose
         # psum_scatter into a FULL-size all-reduce, which would defeat the
         # schedule); after this each data rank holds a 1/|data| summed shard
-        chunks = flat.reshape(n_data, -1)
-        received = jax.lax.all_to_all(chunks, "data", split_axis=0,
-                                      concat_axis=0, tiled=False)
-        shard = received.sum(0)
+        with obs.named_scope("l1_reduce_scatter"):
+            chunks = flat.reshape(n_data, -1)
+            received = jax.lax.all_to_all(chunks, "data", split_axis=0,
+                                          concat_axis=0, tiled=False)
+            shard = received.sum(0)
         # level-2: only the 1/|data| shard crosses the pod boundary
-        shard = jax.lax.psum(shard, "pod")
-        gathered = jax.lax.all_gather(shard, "data", axis=0)  # (n_data, c)
+        with obs.named_scope("l2_cross_pod"):
+            shard = jax.lax.psum(shard, "pod")
+        with obs.named_scope("l1_all_gather"):
+            gathered = jax.lax.all_gather(shard, "data",
+                                          axis=0)  # (n_data, c)
         full = gathered.reshape(-1)
         if pad:
             full = full[:size]
@@ -129,8 +135,20 @@ def gradient_sync(mesh, grads, mode: str = "flat", *,
     else:
         # single-pod or no intra-pod data axis: the two schedules coincide
         body = _flat_body(waxes)
+    def tree_sync(t):
+        # one named scope per leaf: under mode="bucketed" the leaves ARE
+        # the packed buckets, so a device profile shows each bucket's
+        # collective chain (grad_sync_b0, grad_sync_b1, ...) as the
+        # independent region a scheduler may overlap with compute
+        leaves, treedef = jax.tree.flatten(t)
+        out = []
+        for k, g in enumerate(leaves):
+            with obs.named_scope(f"grad_sync_b{k}"):
+                out.append(body(g))
+        return treedef.unflatten(out)
+
     # all axes manual (inputs have no "model" dim; full-manual also works
     # eagerly, where partial-auto does not on older jax)
-    sync = compat.shard_map(lambda t: jax.tree.map(body, t), mesh,
+    sync = compat.shard_map(tree_sync, mesh,
                             in_specs=(P(waxes),), out_specs=P())
     return sync(grads)

@@ -60,6 +60,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import compat
 from .annotate import BATCH, DATA_AXES, _resolve, suppressed
 
@@ -182,26 +184,32 @@ def _fwd_body(spec: PipelineSpec, stage_fn, params_local, xm):
     aux_tot = None
     perm = [(i, i + 1) for i in range(n - 1)]
     for t in range(spec.ticks):
-        m = t - s                                   # traced (device-varying)
-        active = (m >= 0) & (m < M)
-        mc = jnp.clip(m, 0, M - 1)
-        inject = xm[t] if t < M else jnp.zeros_like(buf)
-        cur = jnp.where(first, inject, buf)
-        saved = jnp.where(
-            active, jax.lax.dynamic_update_index_in_dim(saved, cur, mc, 0),
-            saved)
-        y, aux = stage_fn(params_local, cur)
-        aux = jax.tree.map(lambda a: jnp.where(active, a, 0.0), aux)
-        aux_tot = aux if aux_tot is None else jax.tree.map(
-            jnp.add, aux_tot, aux)
-        outs = jnp.where(
-            active & last, jax.lax.dynamic_update_index_in_dim(outs, y, mc, 0),
-            outs)
-        if t < spec.ticks - 1:
-            # hand the stage output one hop down the stage ring; the next
-            # tick's compute is independent, so the scheduler can overlap
-            buf = jax.lax.ppermute(jnp.where(active, y, 0.0), spec.axis,
-                                   perm)
+        # named scope per tick: a device profile shows each fill/steady/
+        # drain tick's stage compute + hand-off under one label
+        with obs.named_scope(f"pp_fwd_t{t}"):
+            m = t - s                               # traced (device-varying)
+            active = (m >= 0) & (m < M)
+            mc = jnp.clip(m, 0, M - 1)
+            inject = xm[t] if t < M else jnp.zeros_like(buf)
+            cur = jnp.where(first, inject, buf)
+            saved = jnp.where(
+                active,
+                jax.lax.dynamic_update_index_in_dim(saved, cur, mc, 0),
+                saved)
+            y, aux = stage_fn(params_local, cur)
+            aux = jax.tree.map(lambda a: jnp.where(active, a, 0.0), aux)
+            aux_tot = aux if aux_tot is None else jax.tree.map(
+                jnp.add, aux_tot, aux)
+            outs = jnp.where(
+                active & last,
+                jax.lax.dynamic_update_index_in_dim(outs, y, mc, 0),
+                outs)
+            if t < spec.ticks - 1:
+                # hand the stage output one hop down the stage ring; the
+                # next tick's compute is independent, so the scheduler can
+                # overlap
+                buf = jax.lax.ppermute(jnp.where(active, y, 0.0), spec.axis,
+                                       perm)
     out = jax.lax.psum(outs, spec.axis)             # nonzero on last stage
     aux_tot = jax.tree.map(
         lambda a: jax.lax.psum(a, (spec.axis,) + spec.data_axes), aux_tot)
@@ -223,29 +231,31 @@ def _bwd_body(spec: PipelineSpec, stage_fn, params_local, saved, dy, daux):
                            params_local)
     perm = [(i, i - 1) for i in range(1, n)]
     for t in reversed(range(spec.ticks)):
-        m = t - s
-        active = (m >= 0) & (m < M)
-        mc = jnp.clip(m, 0, M - 1)
-        x_in = jax.lax.dynamic_index_in_dim(saved, mc, 0, keepdims=False)
-        d_out = jnp.where(last,
-                          jax.lax.dynamic_index_in_dim(dy, mc, 0,
-                                                       keepdims=False),
-                          dbuf)
-        d_out = jnp.where(active, d_out, 0.0)
-        daux_m = jax.tree.map(lambda a: jnp.where(active, a, 0.0), daux)
-        _, pullback = jax.vjp(stage_fn, params_local, x_in)
-        dp, dxi = pullback((d_out, daux_m))
-        dparams = jax.tree.map(
-            lambda acc, g: acc + jnp.where(active, g, 0.0).astype(acc.dtype),
-            dparams, dp)
-        dx = jnp.where(
-            first & active,
-            jax.lax.dynamic_update_index_in_dim(dx, dxi.astype(dx.dtype),
-                                                mc, 0),
-            dx)
-        if t > 0:
-            dbuf = jax.lax.ppermute(jnp.where(active, dxi, 0.0), spec.axis,
-                                    perm)
+        with obs.named_scope(f"pp_bwd_t{t}"):
+            m = t - s
+            active = (m >= 0) & (m < M)
+            mc = jnp.clip(m, 0, M - 1)
+            x_in = jax.lax.dynamic_index_in_dim(saved, mc, 0, keepdims=False)
+            d_out = jnp.where(last,
+                              jax.lax.dynamic_index_in_dim(dy, mc, 0,
+                                                           keepdims=False),
+                              dbuf)
+            d_out = jnp.where(active, d_out, 0.0)
+            daux_m = jax.tree.map(lambda a: jnp.where(active, a, 0.0), daux)
+            _, pullback = jax.vjp(stage_fn, params_local, x_in)
+            dp, dxi = pullback((d_out, daux_m))
+            dparams = jax.tree.map(
+                lambda acc, g:
+                acc + jnp.where(active, g, 0.0).astype(acc.dtype),
+                dparams, dp)
+            dx = jnp.where(
+                first & active,
+                jax.lax.dynamic_update_index_in_dim(dx, dxi.astype(dx.dtype),
+                                                    mc, 0),
+                dx)
+            if t > 0:
+                dbuf = jax.lax.ppermute(jnp.where(active, dxi, 0.0),
+                                        spec.axis, perm)
     if spec.data_axes:
         # grads reduce over the data axes only — never over stage: each
         # stage owns its layer-contiguous param slice (DESIGN.md §10)

@@ -54,6 +54,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.flash_attention import NEG_INF
 
 from . import compat
@@ -237,19 +238,22 @@ def _ring_fwd(spec: RingSpec, q, k, v):
     perm = [(j, (j + 1) % P_) for j in range(P_)]
     k_cur, v_cur = k, v
     for t in range(n_rot + 1):
-        if t in steps:
-            if spec.inner == "pallas":
-                m, l, acc = _pallas_step(spec, t, i, q, k_cur, v_cur,
-                                         m, l, acc)
-            else:
-                src = jnp.mod(i - t, P_) if P_ > 1 else 0
-                m, l, acc = _jnp_step(spec, q32, k_cur, v_cur, m, l, acc,
-                                      q_off, src * Sk)
-        if t < n_rot:
-            # next chunk's permute is independent of this step's compute:
-            # XLA's latency-hiding scheduler overlaps them
-            k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
-            v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
+        # named scope per ring step: a device profile shows each hop's
+        # compute/permute pair under the same label as the host timeline
+        with obs.named_scope(f"ring_fwd_t{t}"):
+            if t in steps:
+                if spec.inner == "pallas":
+                    m, l, acc = _pallas_step(spec, t, i, q, k_cur, v_cur,
+                                             m, l, acc)
+                else:
+                    src = jnp.mod(i - t, P_) if P_ > 1 else 0
+                    m, l, acc = _jnp_step(spec, q32, k_cur, v_cur, m, l, acc,
+                                          q_off, src * Sk)
+            if t < n_rot:
+                # next chunk's permute is independent of this step's
+                # compute: XLA's latency-hiding scheduler overlaps them
+                k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
+                v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
     safe = jnp.where(l == 0.0, 1.0, l)
     out = (acc / safe[..., None]).astype(q.dtype)
     lse = jnp.where(l == 0.0, NEG_INF, m + jnp.log(safe))
@@ -306,20 +310,21 @@ def _ring_bwd_impl(spec: RingSpec, q, k, v, out, lse, do):
     perm = [(j, (j - 1) % P_) for j in range(P_)]
     k_cur, v_cur = k, v
     for t in range(P_):
-        if t in steps:
-            src = jnp.mod(i + t, P_) if P_ > 1 else 0
-            dq_c, dk_c, dv_c = _bwd_block(spec, q32, do32, k_cur, v_cur,
-                                          lse, delta, q_off, src * Sk)
-            dq = dq + dq_c
-            dk = dk + dk_c
-            dv = dv + dv_c
-        if P_ > 1:
-            if t < P_ - 1:      # k/v are dead after the last compute step
-                k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
-                v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
-            # dk/dv always complete the full cycle back to their home shard
-            dk = jax.lax.ppermute(dk, spec.axis, perm)
-            dv = jax.lax.ppermute(dv, spec.axis, perm)
+        with obs.named_scope(f"ring_bwd_t{t}"):
+            if t in steps:
+                src = jnp.mod(i + t, P_) if P_ > 1 else 0
+                dq_c, dk_c, dv_c = _bwd_block(spec, q32, do32, k_cur, v_cur,
+                                              lse, delta, q_off, src * Sk)
+                dq = dq + dq_c
+                dk = dk + dk_c
+                dv = dv + dv_c
+            if P_ > 1:
+                if t < P_ - 1:  # k/v are dead after the last compute step
+                    k_cur = jax.lax.ppermute(k_cur, spec.axis, perm)
+                    v_cur = jax.lax.ppermute(v_cur, spec.axis, perm)
+                # dk/dv always complete the full cycle back home
+                dk = jax.lax.ppermute(dk, spec.axis, perm)
+                dv = jax.lax.ppermute(dv, spec.axis, perm)
     return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
 
 

@@ -49,7 +49,17 @@ def main():
                     default="auto",
                     help="attention implementation selection "
                          "(PerfFlags.attn_impl)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record per-request lifecycle spans and write a "
+                         "Perfetto / chrome://tracing JSON (DESIGN.md §11)")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write the final metrics snapshot (TTFT/TPOT/"
+                         "queue-wait histograms, pool gauges) as JSONL")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace:
+        obs.enable()
 
     if args.seq_shard or args.attn_impl != "auto":
         from repro.perf_flags import set_flags
@@ -91,6 +101,12 @@ def main():
               f"{sum(len(o) for o in outs)} tokens, "
               f"peak cache blocks {stats.peak_cache_blocks} "
               f"({stats.peak_cache_bytes / 2**20:.2f} MiB)")
+        print(f"latency: ttft p50 {stats.ttft_p50 * 1e3:.1f}ms "
+              f"p99 {stats.ttft_p99 * 1e3:.1f}ms | "
+              f"tpot p50 {stats.tpot_p50 * 1e3:.2f}ms "
+              f"p99 {stats.tpot_p99 * 1e3:.2f}ms | "
+              f"queue wait p50 {stats.queue_wait_p50 * 1e3:.1f}ms "
+              f"p99 {stats.queue_wait_p99 * 1e3:.1f}ms")
     else:
         eng = ServeEngine(cfg, params, max_len=max_len)
         toks, stats = eng.generate(prompts,
@@ -100,6 +116,13 @@ def main():
         print("generated:", toks.shape)
     print(f"compile {stats.compile_s:.3f}s prefill {stats.prefill_s:.3f}s "
           f"decode {stats.decode_s:.3f}s ({stats.tok_per_s:.1f} tok/s)")
+    if args.metrics:
+        obs.get_metrics().dump_jsonl(args.metrics)
+        print(f"metrics: {args.metrics}")
+    if args.trace:
+        obs.export(args.trace)
+        print(f"trace: {args.trace} (open in ui.perfetto.dev or "
+              f"chrome://tracing)")
 
 
 if __name__ == "__main__":

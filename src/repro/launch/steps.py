@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import INPUT_SHAPES, ArchConfig, get_model
 
 
@@ -46,10 +47,15 @@ def make_train_step(cfg: ArchConfig, lr=1e-3):
         return model.loss(params, batch)
 
     def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
-        params, opt_state = sgd_momentum_update(params, grads, opt_state,
-                                                lr=lr)
+        # named scopes land in the HLO op metadata, so a device profile
+        # (jax.profiler.trace) shows fwd/bwd/update as labelled regions
+        # that line up with the trainer's host-side "step" span
+        with obs.named_scope("fwd_bwd"):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        with obs.named_scope("optimizer_update"):
+            params, opt_state = sgd_momentum_update(params, grads, opt_state,
+                                                    lr=lr)
         return params, opt_state, {"loss": loss, **metrics}
 
     return train_step
@@ -59,7 +65,8 @@ def make_prefill_step(cfg: ArchConfig):
     model = get_model(cfg)
 
     def prefill_step(params, batch):
-        return model.prefill(params, batch)
+        with obs.named_scope("prefill"):
+            return model.prefill(params, batch)
 
     return prefill_step
 
@@ -68,7 +75,8 @@ def make_decode_step(cfg: ArchConfig):
     model = get_model(cfg)
 
     def decode_step(params, cache, batch):
-        return model.decode(params, cache, batch)
+        with obs.named_scope("decode"):
+            return model.decode(params, cache, batch)
 
     return decode_step
 

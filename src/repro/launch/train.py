@@ -52,7 +52,17 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1,
                     help="micro-batches streamed through the 1F1B "
                          "pipeline schedule (--pp-stages)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record engine/trainer spans and write a "
+                         "Perfetto / chrome://tracing JSON (DESIGN.md §11)")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write per-step records and the final metrics "
+                         "snapshot as JSONL")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace:
+        obs.enable()
 
     if args.seq_shard or args.attn_impl != "auto":
         from repro.perf_flags import set_flags
@@ -82,10 +92,23 @@ def main():
     data = PrefetchIterator(
         SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps),
         depth=4)
+    logger = None
+    if args.metrics:
+        from repro.obs import JsonlSink, MetricsLogger, StdoutSink
+        logger = MetricsLogger([StdoutSink(), JsonlSink(args.metrics)])
     with ctx:
-        tr = Trainer(cfg, tcfg)
+        tr = Trainer(cfg, tcfg, logger=logger)
         tr.fit(iter(data))
     print("final:", tr.history[-1])
+    if logger is not None:
+        logger.close()
+    if args.metrics:
+        obs.get_metrics().dump_jsonl(args.metrics)
+        print(f"metrics: {args.metrics}")
+    if args.trace:
+        obs.export(args.trace)
+        print(f"trace: {args.trace} (open in ui.perfetto.dev or "
+              f"chrome://tracing)")
 
 
 if __name__ == "__main__":

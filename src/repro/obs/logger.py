@@ -1,0 +1,68 @@
+"""Structured training-log sinks: the replacement for raw ``print``.
+
+``Trainer.fit`` hands each log-step payload (loss, grad_norm, wall_s,
+steps_per_s, ...) to a :class:`MetricsLogger`, which fans it out to
+sinks: ``StdoutSink`` keeps the familiar one-line format (the default —
+a bare ``python -m repro.launch.train`` looks exactly like before),
+``JsonlSink`` appends machine-readable lines for CI artifacts
+(``--metrics PATH``).
+
+Worked example::
+
+    >>> log = MetricsLogger([])                # no sinks: history only
+    >>> log.log({"step": 0, "loss": 2.5})
+    >>> log.history[0]["loss"]
+    2.5
+"""
+from __future__ import annotations
+
+import json
+
+
+class StdoutSink:
+    """The trainer's classic one-liner, plus throughput."""
+
+    def log(self, payload: dict) -> None:
+        loss = payload.get("loss", float("nan"))
+        parts = [f"step {payload.get('step', 0):5d} loss {loss:.4f}",
+                 f"ce {payload.get('ce', loss):.4f}",
+                 f"gnorm {payload.get('grad_norm', 0.0):.2f}",
+                 f"t {payload.get('wall_s', 0.0)}s"]
+        if "steps_per_s" in payload:
+            parts.append(f"{payload['steps_per_s']:.2f} steps/s")
+        print(" ".join(parts))
+
+
+class JsonlSink:
+    """One ``{"kind": "step", ...}`` JSON line per log event."""
+
+    def __init__(self, path: str, mode: str = "a"):
+        self.path = path
+        self._f = open(path, mode)
+
+    def log(self, payload: dict) -> None:
+        self._f.write(json.dumps({"kind": "step", **payload}) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class MetricsLogger:
+    """Fan a log-step payload out to sinks; keeps an in-process history
+    (what ``Trainer.history`` reads)."""
+
+    def __init__(self, sinks: list | None = None):
+        self.sinks = [StdoutSink()] if sinks is None else list(sinks)
+        self.history: list[dict] = []
+
+    def log(self, payload: dict) -> None:
+        self.history.append(dict(payload))
+        for sink in self.sinks:
+            sink.log(payload)
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            close = getattr(sink, "close", None)
+            if close:
+                close()

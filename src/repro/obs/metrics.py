@@ -1,0 +1,177 @@
+"""Metrics registry: counters, gauges, histograms with quantile summaries.
+
+The numeric half of the obs layer (DESIGN.md §11): where ``trace.py``
+answers *when did it happen*, this answers *how much / how often* —
+engine wave widths, KVStore bytes by key, serving TTFT/TPOT
+distributions, block-pool occupancy.  Always on: recording a sample is a
+dict lookup plus a float append, cheap enough that the serving engine
+can observe every request without a flag.
+
+Export is JSONL — one self-describing line per metric — so CI can grep a
+single metric out of an artifact without parsing a document.
+
+Worked example (pure — runs anywhere)::
+
+    >>> m = Metrics()
+    >>> m.counter("kv.bytes").inc(512)
+    >>> m.gauge("pool.blocks").set(7)
+    >>> h = m.histogram("ttft_s")
+    >>> for v in [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]:
+    ...     h.observe(v)
+    >>> h.quantile(0.5), h.quantile(0.99)
+    (5.5, 9.91)
+    >>> snap = m.snapshot()
+    >>> snap["kv.bytes"]["value"], snap["pool.blocks"]["max"]
+    (512, 7)
+"""
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Counter:
+    """Monotonic accumulator (bytes moved, ops executed, tokens emitted)."""
+    name: str
+    value: float = 0
+
+    def inc(self, v: float = 1) -> None:
+        self.value += v
+
+    def summary(self) -> dict:
+        return {"type": "counter", "value": self.value}
+
+
+@dataclass
+class Gauge:
+    """Last-value metric with a high-water mark (pool occupancy)."""
+    name: str
+    value: float = 0.0
+    max: float = float("-inf")
+
+    def set(self, v: float) -> None:
+        self.value = v
+        if v > self.max:
+            self.max = v
+
+    def summary(self) -> dict:
+        return {"type": "gauge", "value": self.value,
+                "max": self.max if self.max != float("-inf") else self.value}
+
+
+@dataclass
+class Histogram:
+    """Raw-sample histogram with linear-interpolated quantiles.
+
+    Samples are kept (bounded by ``cap``, oldest dropped) so p50/p90/p99
+    are exact over the retained window — serving runs observe hundreds of
+    requests, not millions, and exactness is worth more than a sketch.
+    """
+    name: str
+    cap: int = 1 << 16
+    values: list[float] = field(default_factory=list)
+    count: int = 0
+    total: float = 0.0
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self.values.append(float(v))
+        if len(self.values) > self.cap:
+            del self.values[: len(self.values) - self.cap]
+
+    def quantile(self, q: float, values: list[float] | None = None) -> float:
+        """Linear interpolation between closest ranks (numpy's default),
+        over ``values`` (default: all retained samples)."""
+        vs = sorted(self.values if values is None else values)
+        if not vs:
+            return 0.0
+        if len(vs) == 1:
+            return vs[0]
+        pos = q * (len(vs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(vs) - 1)
+        return vs[lo] + (vs[hi] - vs[lo]) * (pos - lo)
+
+    def summary(self) -> dict:
+        vs = self.values
+        return {"type": "histogram", "count": self.count, "sum": self.total,
+                "min": min(vs) if vs else 0.0, "max": max(vs) if vs else 0.0,
+                "p50": self.quantile(0.50), "p90": self.quantile(0.90),
+                "p99": self.quantile(0.99)}
+
+
+class Metrics:
+    """Get-or-create registry of named metrics; thread-safe creation."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.setdefault(name, cls(name))
+        if not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    def remove_prefix(self, prefix: str) -> int:
+        """Drop every metric whose name starts with ``prefix`` (a layer
+        re-initializing — e.g. ``reset_default_engine`` — must not leave
+        a dead instance's numbers in the registry)."""
+        with self._lock:
+            dead = [n for n in self._metrics if n.startswith(prefix)]
+            for n in dead:
+                del self._metrics[n]
+        return len(dead)
+
+    def snapshot(self) -> dict:
+        """``{name: summary dict}`` for every registered metric."""
+        return {n: m.summary() for n, m in sorted(self._metrics.items())}
+
+    def dump_jsonl(self, path: str, mode: str = "a",
+                   extra: dict | None = None) -> int:
+        """Append one ``{"kind": "metric", "name": ..., ...}`` JSON line
+        per metric; returns the number of lines written."""
+        snap = self.snapshot()
+        with open(path, mode) as f:
+            for name, summary in snap.items():
+                line = {"kind": "metric", "name": name, **summary,
+                        **(extra or {})}
+                # numpy scalars (KVStore byte counters) must not corrupt
+                # the artifact mid-write
+                f.write(json.dumps(line, default=float) + "\n")
+        return len(snap)
+
+
+# ---------------------------------------------------------------------------
+# module-level default registry
+
+_METRICS = Metrics()
+
+
+def get_metrics() -> Metrics:
+    return _METRICS
+
+
+def reset_metrics() -> Metrics:
+    global _METRICS
+    _METRICS = Metrics()
+    return _METRICS

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import ArchConfig, get_model
 
 from .paging import BlockAllocator, BlockTables, PagingError
@@ -43,6 +44,15 @@ class ServeStats:
     steps: int = 0             # request's first token comes from prefill
     peak_cache_blocks: int = 0   # logits and is counted by neither engine)
     peak_cache_bytes: int = 0    # paged engine only
+    # per-request latency accounting (paged engine; DESIGN.md §11):
+    # TTFT = enqueue -> first token, TPOT = mean inter-token time after
+    # the first, queue_wait = enqueue -> admission.  Seconds.
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p50: float = 0.0
+    tpot_p99: float = 0.0
+    queue_wait_p50: float = 0.0
+    queue_wait_p99: float = 0.0
 
     @property
     def tok_per_s(self):
@@ -130,6 +140,11 @@ class Request:
     max_new_tokens: int
     out: list[int] = field(default_factory=list)
     prefilled: int = 0          # prompt tokens already in the cache
+    # lifecycle stamps (time.perf_counter(); obs layer, DESIGN.md §11)
+    t_enq: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0        # first token sampled (prefill logits)
+    t_done: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -183,6 +198,19 @@ class PagedServeEngine:
         self._next_rid = 0
         self._key = jax.random.PRNGKey(0)
         self.temperature = 0.0
+        # obs (DESIGN.md §11): lifecycle spans land on per-request tracks
+        # ("req<rid>"), engine steps on "serve"; TTFT/TPOT/queue-wait
+        # histograms live in the process metrics registry.  _observe is
+        # dropped during warmup so the throwaway request pollutes nothing.
+        self._observe = True
+
+    # -- obs helpers --------------------------------------------------------
+    @staticmethod
+    def _hist(name: str):
+        return obs.get_metrics().histogram(name)
+
+    def _req_track(self, req: Request) -> str:
+        return f"req{req.rid}"
 
     # -- request lifecycle --------------------------------------------------
     def add_request(self, prompt: list[int], max_new_tokens: int) -> int:
@@ -197,7 +225,13 @@ class PagedServeEngine:
                 f"{self.alloc.num_blocks - 1} — it could never be admitted")
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append(Request(rid, list(prompt), max_new_tokens))
+        req = Request(rid, list(prompt), max_new_tokens,
+                      t_enq=time.perf_counter())
+        self.pending.append(req)
+        if self._observe:
+            obs.get_recorder().instant(
+                "enqueued", cat="serve", track=self._req_track(req),
+                prompt_len=len(prompt), budget=max_new_tokens)
         return rid
 
     def _worst_case_pages(self, req: Request) -> int:
@@ -215,9 +249,36 @@ class PagedServeEngine:
             self.slots[slot] = req
             self.pos[slot] = 0
             req.prefilled = 0
+            req.t_admit = time.perf_counter()
+            if self._observe:
+                rec = obs.get_recorder()
+                rec.complete("queued", rec.to_us(req.t_enq),
+                             rec.to_us(req.t_admit), cat="serve",
+                             track=self._req_track(req), slot=slot)
+                self._hist("serve.queue_wait_s").observe(
+                    req.t_admit - req.t_enq)
+
+    def _first_token(self, req: Request):
+        """Stamp + record the first-token milestone (TTFT)."""
+        req.t_first = time.perf_counter()
+        if self._observe:
+            obs.get_recorder().instant("first_token", cat="serve",
+                                       track=self._req_track(req))
+            self._hist("serve.ttft_s").observe(req.t_first - req.t_enq)
 
     def _finish(self, slot: int):
         req = self.slots[slot]
+        req.t_done = time.perf_counter()
+        if self._observe:
+            rec = obs.get_recorder()
+            t0 = req.t_first or req.t_admit or req.t_enq
+            rec.complete("decode", rec.to_us(t0), rec.to_us(req.t_done),
+                         cat="serve", track=self._req_track(req),
+                         tokens=len(req.out))
+            rec.instant("evicted", cat="serve", track=self._req_track(req))
+            if req.t_first and len(req.out) > 1:
+                self._hist("serve.tpot_s").observe(
+                    (req.t_done - req.t_first) / (len(req.out) - 1))
         self.completed[req.rid] = list(req.out)
         self._reserved_blocks -= self._worst_case_pages(req)
         self.tables.release(slot)
@@ -240,9 +301,13 @@ class PagedServeEngine:
                  "start": jnp.asarray(start, jnp.int32),
                  "length": jnp.asarray(n, jnp.int32),
                  "slot": jnp.asarray(slot, jnp.int32)}
+        rec = obs.get_recorder()
         t0 = time.time()
-        logits, self.cache = self._chunk(self.params, self.cache, batch)
-        logits.block_until_ready()
+        with rec.span("prefill_chunk", cat="serve",
+                      track=self._req_track(req) if self._observe else "serve",
+                      slot=slot, start=start, tokens=n):
+            logits, self.cache = self._chunk(self.params, self.cache, batch)
+            logits.block_until_ready()
         stats.prefill_s += time.time() - t0
         req.prefilled += n
         self.pos[slot] = req.prefilled
@@ -273,6 +338,7 @@ class PagedServeEngine:
         for slot, logits in list(self._last_logits.items()):
             req = self.slots[slot]
             req.out.append(int(np.asarray(self._sample(logits))))
+            self._first_token(req)
             del self._last_logits[slot]
             if req.done:                      # degenerate 1-token budget
                 self._finish(slot)
@@ -299,9 +365,17 @@ class PagedServeEngine:
                  "block_tables": jnp.asarray(tables),
                  "pos": jnp.asarray(pos),
                  "active": jnp.asarray(active)}
+        rec = obs.get_recorder()
+        if self._observe:
+            rec.counter("blocks_in_use", self.alloc.in_use, track="serve",
+                        cat="serve")
+            obs.get_metrics().gauge("serve.blocks_in_use").set(
+                self.alloc.in_use)
         t0 = time.time()
-        logits, self.cache = self._decode(self.params, self.cache, batch)
-        nxt = np.asarray(self._sample(logits))
+        with rec.span("decode_step", cat="serve", track="serve",
+                      lanes=len(lanes)):
+            logits, self.cache = self._decode(self.params, self.cache, batch)
+            nxt = np.asarray(self._sample(logits))
         stats.decode_s += time.time() - t0
         stats.steps += 1
 
@@ -323,6 +397,12 @@ class PagedServeEngine:
         stats = stats if stats is not None else ServeStats()
         # report THIS run's high-water mark (in-flight blocks still count)
         self.alloc.peak_in_use = self.alloc.in_use
+        # latency percentiles are computed over THIS run's observations
+        # (the registry histograms accumulate across runs)
+        h_ttft = self._hist("serve.ttft_s")
+        h_tpot = self._hist("serve.tpot_s")
+        h_wait = self._hist("serve.queue_wait_s")
+        marks = {id(h): len(h.values) for h in (h_ttft, h_tpot, h_wait)}
         steps = 0
         while self.busy:
             self.step(stats)
@@ -335,6 +415,14 @@ class PagedServeEngine:
                                   * kv_cache_bytes_paged(
                                       self.cfg, [], self.block_size)
                                   ["block_bytes"])
+
+        def pcts(h):
+            vs = h.values[marks[id(h)]:]
+            return h.quantile(0.50, vs), h.quantile(0.99, vs)
+
+        stats.ttft_p50, stats.ttft_p99 = pcts(h_ttft)
+        stats.tpot_p50, stats.tpot_p99 = pcts(h_tpot)
+        stats.queue_wait_p50, stats.queue_wait_p99 = pcts(h_wait)
         return stats
 
     def reset(self):
@@ -355,11 +443,15 @@ class PagedServeEngine:
         t0 = time.time()
         saved_pending = self.pending
         self.pending = deque()
-        self.add_request([1] * min(self.prefill_chunk + 1,
-                                   self.max_len - 2), 2)
-        self.run()
-        self.reset()
-        self.pending = saved_pending
+        self._observe = False       # the throwaway request is not traffic
+        try:
+            self.add_request([1] * min(self.prefill_chunk + 1,
+                                       self.max_len - 2), 2)
+            self.run()
+            self.reset()
+        finally:
+            self._observe = True
+            self.pending = saved_pending
         return time.time() - t0
 
     def generate(self, prompts: list[list[int]],

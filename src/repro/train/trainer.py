@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import ArchConfig, get_model
+from repro.obs import MetricsLogger
 from repro.optim import sgd_momentum, warmup_cosine
 from repro.optim.optimizers import Optimizer
 
@@ -54,9 +56,13 @@ class TrainConfig:
 
 class Trainer:
     def __init__(self, cfg: ArchConfig, tcfg: TrainConfig,
-                 optimizer: Optimizer | None = None):
+                 optimizer: Optimizer | None = None,
+                 logger: MetricsLogger | None = None):
         self.cfg = cfg
         self.tcfg = tcfg
+        # stdout sink by default — a bare run logs exactly like before;
+        # launch --metrics swaps in/adds the JSONL sink (DESIGN.md §11)
+        self.logger = logger if logger is not None else MetricsLogger()
         if tcfg.pp_stages > 1 or tcfg.microbatches > 1:
             from repro.dist.pipeline import validate_pipeline
             from repro.perf_flags import FLAGS, set_flags
@@ -125,26 +131,54 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def fit(self, data: Iterator, seed: int = 0, state=None):
-        """jit path."""
+        """jit path.
+
+        Per-step obs (DESIGN.md §11): ``data_wait`` / ``step`` /
+        ``metrics_fetch`` / ``checkpoint`` spans on the "trainer" track.
+        Metrics reach the host via ONE ``jax.device_get`` of the whole
+        dict, only on log steps — per-item ``float(v)`` inside the loop
+        forced a device sync per metric on every logged step, blocking
+        dispatch of the next step's work.
+        """
         params, opt_state = state or self.init_state(seed)
         step_fn = self._make_step()
+        rec = obs.get_recorder()
         t0 = time.time()
-        for i, batch in enumerate(data):
-            if i >= self.tcfg.total_steps:
+        t_log, i_log = t0, 0          # steps_per_s window since last log
+        data = iter(data)
+        i = 0
+        while i < self.tcfg.total_steps:
+            with rec.span("data_wait", cat="train", track="trainer", step=i):
+                batch = next(data, None)
+            if batch is None:
                 break
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            with rec.span("step", cat="train", track="trainer", step=i), \
+                    obs.annotation("train_step"):
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch)
             if i % self.tcfg.log_every == 0 or i == self.tcfg.total_steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                m.update(step=i, wall_s=round(time.time() - t0, 2))
+                with rec.span("metrics_fetch", cat="train", track="trainer",
+                              step=i):
+                    m = {k: float(v)
+                         for k, v in jax.device_get(metrics).items()}
+                now = time.time()
+                m.update(step=i, wall_s=round(now - t0, 2),
+                         steps_per_s=round((i - i_log + 1)
+                                           / max(now - t_log, 1e-9), 3))
+                t_log, i_log = now, i + 1
                 self.history.append(m)
-                print(f"step {i:5d} loss {m['loss']:.4f} "
-                      f"ce {m.get('ce', m['loss']):.4f} "
-                      f"gnorm {m['grad_norm']:.2f} t {m['wall_s']}s")
+                self.logger.log(m)
+                obs.get_metrics().gauge("train.steps_per_s").set(
+                    m["steps_per_s"])
             if (self.tcfg.checkpoint_every
                     and i and i % self.tcfg.checkpoint_every == 0):
-                save_checkpoint(self.tcfg.checkpoint_dir,
-                                {"params": params, "opt": opt_state}, step=i)
+                with rec.span("checkpoint", cat="train", track="trainer",
+                              step=i):
+                    save_checkpoint(self.tcfg.checkpoint_dir,
+                                    {"params": params, "opt": opt_state},
+                                    step=i)
+            i += 1
         return params, opt_state
 
     # ------------------------------------------------------------------
@@ -189,4 +223,6 @@ class Trainer:
                     kv.push(k, w, np.asarray(g, np.float32) / n_workers)
                 step_losses.append(float(loss))
             losses.append(float(np.mean(step_losses)))
+        # per-key push/pull byte attribution -> process metrics registry
+        kv.publish_metrics()
         return losses

@@ -1,0 +1,243 @@
+"""Observability layer (ISSUE 6 / DESIGN.md §11): trace recorder
+semantics, metrics quantiles, Perfetto export validity, the serving
+engine's per-request lifecycle spans, and engine-stats reset coherence."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import Tag, reset_default_engine
+from repro.models import get_model, reduced
+from repro.obs import (Metrics, TraceRecorder, get_metrics, get_recorder,
+                       set_recorder)
+from repro.serve import PagedServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def recorder():
+    """Fresh enabled recorder installed as the process default."""
+    old = get_recorder()
+    rec = set_recorder(TraceRecorder(enabled=True))
+    yield rec
+    set_recorder(old)
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+
+def test_span_nesting_and_ordering(recorder):
+    with recorder.span("outer", cat="t"):
+        with recorder.span("inner", cat="t"):
+            recorder.instant("mark", cat="t")
+    names = [e["name"] for e in recorder.events()]
+    assert names == ["mark", "inner", "outer"]      # inner closes first
+    by = {e["name"]: e for e in recorder.events()}
+    # the outer interval contains the inner one
+    assert by["outer"]["ts"] <= by["inner"]["ts"]
+    assert (by["inner"]["ts"] + by["inner"]["dur"]
+            <= by["outer"]["ts"] + by["outer"]["dur"] + 1e-6)
+    assert by["mark"]["ph"] == "i"
+
+
+def test_disabled_recorder_records_nothing():
+    rec = TraceRecorder(enabled=False)
+    with rec.span("a"):
+        rec.instant("b")
+        rec.counter("c", 1)
+    rec.complete("d", 0.0, 1.0)
+    assert rec.events() == []
+    # the disabled span path allocates nothing: one shared nullcontext
+    assert rec.span("x") is rec.span("y")
+
+
+def test_tracks_map_to_stable_tids(recorder):
+    with recorder.span("a", track="engine"):
+        pass
+    with recorder.span("b", track="serve"):
+        pass
+    with recorder.span("c", track="engine"):
+        pass
+    by = {e["name"]: e["tid"] for e in recorder.events()}
+    assert by["a"] == by["c"] != by["b"]
+
+
+def test_cross_frame_complete_event(recorder):
+    import time
+    t0 = time.perf_counter()
+    t1 = time.perf_counter()
+    recorder.complete("queued", recorder.to_us(t0), recorder.to_us(t1),
+                      cat="serve", slot=3)
+    (e,) = recorder.events()
+    assert e["ph"] == "X" and e["dur"] >= 0 and e["args"]["slot"] == 3
+
+
+def test_perfetto_export_schema(recorder, tmp_path):
+    with recorder.span("op", cat="engine", track="engine", seq=0):
+        recorder.instant("tick", cat="engine", track="engine")
+    recorder.counter("pool", 5, track="engine")
+    path = tmp_path / "trace.json"
+    recorder.export(str(path))
+    doc = json.loads(path.read_text())          # valid JSON
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    # metadata first: process_name + one thread_name per track
+    assert evs[0] == {"name": "process_name", "ph": "M", "pid": 1,
+                      "args": {"name": "repro"}}
+    tracks = [e["args"]["name"] for e in evs if e["name"] == "thread_name"]
+    assert "engine" in tracks
+    for e in evs:
+        assert {"name", "ph", "pid"} <= set(e)
+        if e["ph"] == "X":
+            assert {"ts", "dur"} <= set(e) and e["dur"] >= 0
+        if e["ph"] == "C":
+            assert "value" in e["args"]
+
+
+def test_enable_starts_fresh_timeline():
+    from repro import obs
+    old = get_recorder()
+    try:
+        rec = obs.enable()
+        with rec.span("x"):
+            pass
+        assert len(rec.events()) == 1
+        obs.enable(False)
+        rec2 = obs.enable()                     # off -> on: fresh buffer
+        assert rec2.events() == []
+    finally:
+        set_recorder(old)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+
+def test_histogram_quantiles_known_values():
+    m = Metrics()
+    h = m.histogram("lat")
+    for v in range(1, 11):                      # 1..10
+        h.observe(v)
+    assert h.quantile(0.0) == 1.0
+    assert h.quantile(0.5) == 5.5               # numpy linear interpolation
+    assert h.quantile(0.9) == pytest.approx(9.1)
+    assert h.quantile(1.0) == 10.0
+    assert h.quantile(0.5, values=[3.0]) == 3.0
+    assert h.quantile(0.5, values=[]) == 0.0
+    s = h.summary()
+    assert s["count"] == 10 and s["sum"] == 55.0
+
+
+def test_metrics_registry_types_and_dump(tmp_path):
+    m = Metrics()
+    m.counter("bytes").inc(100)
+    m.gauge("pool").set(3)
+    m.gauge("pool").set(1)                      # max is a high-water mark
+    with pytest.raises(TypeError):
+        m.histogram("bytes")
+    assert m.snapshot()["pool"] == {"type": "gauge", "value": 1, "max": 3}
+    path = tmp_path / "m.jsonl"
+    assert m.dump_jsonl(str(path)) == 2
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert {ln["name"] for ln in lines} == {"bytes", "pool"}
+    assert all(ln["kind"] == "metric" for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# engine stats coherence (the reset-staleness fix)
+
+def test_engine_stats_fresh_after_reset():
+    eng = reset_default_engine()
+    a = Tag("a")
+    for _ in range(3):
+        eng.push(lambda: None, writes=(a,), name="w")
+    eng.wait_all()
+    eng.publish_stats()
+    m = get_metrics()
+    assert m.gauge("engine.ops_executed").value == 3
+    assert m.histogram("engine.wave_size").count == 3
+    # a fresh engine must publish fresh numbers, not accumulate onto the
+    # dead instance's record
+    eng2 = reset_default_engine()
+    assert "engine.ops_executed" not in m.names()
+    eng2.push(lambda: None, writes=(a,), name="w")
+    eng2.wait_all()
+    eng2.publish_stats()
+    assert m.gauge("engine.ops_executed").value == 1
+    assert m.histogram("engine.wave_size").count == 1
+
+
+def test_engine_op_spans(recorder):
+    eng = reset_default_engine()
+    a, b = Tag("a"), Tag("b")
+    eng.push(lambda: None, writes=(a,), name="init")
+    eng.push(lambda: None, reads=(a,), writes=(b,), name="consume")
+    eng.wait_all()
+    spans = [e for e in recorder.events() if e["cat"] == "engine"]
+    assert [s["name"] for s in spans] == ["init", "consume"]
+    assert spans[1]["args"]["reads"] == ["a"]
+    assert spans[1]["args"]["writes"] == ["b"]
+    assert all("wave" in s["args"] for s in spans)
+    reset_default_engine()
+
+
+# ---------------------------------------------------------------------------
+# serving lifecycle spans
+
+def test_paged_serve_request_lifecycle(recorder):
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = get_model(cfg).init(KEY)
+    rng = np.random.RandomState(3)
+    prompts = [list(rng.randint(1, cfg.vocab, L)) for L in (5, 11, 19)]
+    eng = PagedServeEngine(cfg, params, block_size=8, max_batch=2,
+                           max_len=64, prefill_chunk=8)
+    outs, stats = eng.generate(prompts, max_new_tokens=[3, 4, 6])
+    assert [len(o) for o in outs] == [3, 4, 6]
+
+    evs = recorder.events()
+    doc = recorder.export()
+    req_tracks = sorted(e["args"]["name"] for e in doc["traceEvents"]
+                        if e.get("name") == "thread_name"
+                        and e["args"]["name"].startswith("req"))
+    # exactly the 3 admitted requests have tracks: the warmup throwaway
+    # request (rid 0) is not observed
+    assert req_tracks == ["req1", "req2", "req3"]
+    for track in req_tracks:
+        tids = _tids_for(recorder, track)
+        mine = [e for e in evs if e["cat"] == "serve" and e["tid"] in tids]
+        names = [e["name"] for e in mine]
+        # complete chain: enqueued -> queued -> prefill -> first token ->
+        # decode -> evicted, in timeline order
+        for n in ("enqueued", "queued", "prefill_chunk", "first_token",
+                  "decode", "evicted"):
+            assert n in names, f"{track} missing {n}: {names}"
+        by = {e["name"]: e for e in mine}
+        assert by["queued"]["ts"] <= by["first_token"]["ts"]
+        assert by["first_token"]["ts"] <= by["evicted"]["ts"]
+
+    # per-run latency percentiles populated (seconds, small but positive)
+    assert stats.ttft_p99 >= stats.ttft_p50 > 0
+    assert stats.tpot_p99 >= stats.tpot_p50 > 0
+    assert stats.queue_wait_p99 >= stats.queue_wait_p50 >= 0
+    h = get_metrics().histogram("serve.ttft_s")
+    assert h.count >= 3
+
+
+def _tids_for(rec, track):
+    doc = rec.export()
+    return {e["tid"] for e in doc["traceEvents"]
+            if e.get("name") == "thread_name"
+            and e["args"]["name"] == track}
+
+
+def test_warmup_is_not_observed(recorder):
+    cfg = reduced(get_config("qwen1.5-0.5b"))
+    params = get_model(cfg).init(KEY)
+    eng = PagedServeEngine(cfg, params, block_size=8, max_batch=2,
+                           max_len=64, prefill_chunk=8)
+    before = get_metrics().histogram("serve.ttft_s").count
+    eng.warmup()
+    assert get_metrics().histogram("serve.ttft_s").count == before
+    assert eng._observe is True                 # restored after warmup
