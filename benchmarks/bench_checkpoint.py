@@ -1,0 +1,190 @@
+"""Sharded async checkpointing (DESIGN.md §12): the save-stall benchmark
+plus the byte-model and torn-checkpoint structural gates.
+
+Three claims, one per gate:
+
+* **Async overlap** — ``AsyncCheckpointer.save()`` on the async path
+  only snapshots device shards to host and enqueues; serialization,
+  fsync and the two-phase commit run on the background writer.  The
+  caller-visible stall must be <= 25% of a fully synchronous
+  gather-serialize-commit save of the same state (the ISSUE 7
+  acceptance bound; both numbers from the same run, so the ratio is
+  machine-portable in the ``fig7``/``dist`` sense).
+* **Byte model** — ``checkpoint_plan()``'s analytic ``total_bytes``
+  must equal the bytes actually on disk *exactly* (raw shard files
+  carry no container overhead, so the memplan §6 cross-validation
+  discipline applies byte-for-byte).
+* **Torn checkpoints are never loadable** — a save that dies mid-write
+  (FailingFS) must leave a directory that ``find_checkpoints`` skips
+  and ``load_checkpoint`` refuses.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_checkpoint.py
+
+CSV: name,value,derived
+"""
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+N_LEAVES = 8
+LEAF_SHAPE = (1024, 1024)      # 8 x 4 MiB f32 = 32 MiB state
+REPS = 3
+STALL_RATIO_MAX = 0.25         # ISSUE 7 acceptance bound
+
+
+def _make_state():
+    # device-resident leaves: the async-path stall then includes the
+    # device->host shard snapshot, exactly as Trainer.fit pays it
+    import jax
+    rng = np.random.RandomState(0)
+    host = {"blocks": {f"p{i}": {"w": rng.randn(*LEAF_SHAPE)
+                                 .astype(np.float32)}
+                       for i in range(N_LEAVES - 1)},
+            "head": rng.randn(*LEAF_SHAPE).astype(np.float32)}
+    return jax.device_put(host)
+
+
+def _time_saves(state, async_save: bool) -> float:
+    """Min caller-visible ``save()`` wall time over REPS reps (fresh
+    checkpointer, keep=0 so pruning never pollutes the timing)."""
+    from repro.train import AsyncCheckpointer
+    root = Path(tempfile.mkdtemp(prefix="bench_ckpt_"))
+    try:
+        ck = AsyncCheckpointer(root, keep=0, async_save=async_save)
+        ck.save(state, step=0)          # warmup: thread spin-up, allocs
+        ck.wait_for_checkpoint()
+        best = float("inf")
+        for i in range(REPS):
+            t0 = time.perf_counter()
+            ck.save(state, step=i + 1)
+            best = min(best, time.perf_counter() - t0)
+            ck.wait_for_checkpoint()    # drain before the next rep
+        ck.close()
+        return best
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _disk_bytes(state) -> tuple[int, int, float]:
+    """(shard bytes on disk, shard file count, restore seconds)."""
+    from repro.train import load_checkpoint, save_checkpoint
+    root = Path(tempfile.mkdtemp(prefix="bench_ckpt_"))
+    try:
+        d = root / "step_00000000"
+        save_checkpoint(d, state, step=0)
+        files = sorted(d.glob("*.bin"))
+        nbytes = sum(f.stat().st_size for f in files)
+        t0 = time.perf_counter()
+        restored, _ = load_checkpoint(d, like=state)
+        dt = time.perf_counter() - t0
+        np.testing.assert_array_equal(restored["head"], state["head"])
+        return nbytes, len(files), dt
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _torn_loadable() -> int:
+    """1 if a torn (mid-write-failed) checkpoint is discoverable or
+    loadable — must be 0."""
+    from repro.train import (AsyncCheckpointer, CheckpointError, FailingFS,
+                             find_checkpoints, load_checkpoint)
+    root = Path(tempfile.mkdtemp(prefix="bench_ckpt_"))
+    try:
+        state = {"w": np.arange(4096, dtype=np.float32)}
+        bad = AsyncCheckpointer(root, async_save=False,
+                                fs=FailingFS(fail_after_bytes=256))
+        try:
+            bad.save(state, step=1)
+            return 1                    # the fault never fired
+        except (CheckpointError, OSError):
+            pass
+        if find_checkpoints(root):
+            return 1                    # discovery offered the torn dir
+        try:
+            load_checkpoint(root / "step_00000001")
+            return 1                    # ...and it loaded?!
+        except (CheckpointError, FileNotFoundError):
+            return 0
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(csv: bool = True):
+    from repro.train import checkpoint_plan
+
+    state = _make_state()
+    rows = []
+
+    def emit(name, value, derived=""):
+        rows.append((name, value, derived))
+        if csv:
+            print(f"{name},{value},{derived}")
+
+    plan = checkpoint_plan(state)
+    plan8 = checkpoint_plan(state, n_hosts=8)
+    disk, n_files, restore_s = _disk_bytes(state)
+    sync_s = _time_saves(state, async_save=False)
+    stall_s = _time_saves(state, async_save=True)
+
+    emit("checkpoint_state_mib", round(plan["total_bytes"] / 2**20, 3),
+         f"{plan['n_shards']} leaves/shards")
+    emit("checkpoint_bytes_model", plan["total_bytes"],
+         "checkpoint_plan() analytic total")
+    emit("checkpoint_bytes_disk", disk,
+         f"{n_files} raw shard files (gate: == model exactly)")
+    emit("checkpoint_bytes_per_host_8", plan8["bytes_per_host"],
+         "analytic per-host write volume, 8 hosts")
+    emit("checkpoint_sync_save_ms", round(sync_s * 1e3, 2),
+         "gather+serialize+fsync+commit on the caller (absolute; "
+         "not gated)")
+    emit("checkpoint_async_stall_ms", round(stall_s * 1e3, 2),
+         "caller-visible save() stall, async path (absolute; not gated)")
+    emit("checkpoint_stall_ratio", round(stall_s / sync_s, 4),
+         f"async stall / sync save (gate: <= {STALL_RATIO_MAX})")
+    emit("checkpoint_restore_ms", round(restore_s * 1e3, 2),
+         "single-device elastic restore (absolute; not gated)")
+    emit("checkpoint_torn_loadable", _torn_loadable(),
+         "torn save discoverable or loadable (gate: 0)")
+    return rows
+
+
+def validate(rows) -> list[str]:
+    """Acceptance (ISSUE 7): async stall <= 25% of the sync save, the
+    analytic byte model matches disk exactly, and no torn checkpoint is
+    ever loadable."""
+    d = {name: value for name, value, _ in rows}
+    failures = []
+    ratio = d.get("checkpoint_stall_ratio")
+    if ratio is None:
+        failures.append("missing checkpoint_stall_ratio")
+    elif ratio > STALL_RATIO_MAX:
+        failures.append(
+            f"async save stall is {ratio:.0%} of the sync save "
+            f"(bound {STALL_RATIO_MAX:.0%}) — serialization is back "
+            f"on the step critical path")
+    if d.get("checkpoint_bytes_model") != d.get("checkpoint_bytes_disk"):
+        failures.append(
+            f"byte model {d.get('checkpoint_bytes_model')} != disk "
+            f"{d.get('checkpoint_bytes_disk')} — the memplan checkpoint "
+            f"model no longer matches the on-disk format")
+    if d.get("checkpoint_torn_loadable") != 0:
+        failures.append("a torn checkpoint was discoverable or loadable")
+    total = d.get("checkpoint_bytes_model", 0)
+    per_host = d.get("checkpoint_bytes_per_host_8", 0)
+    if not total or per_host != -(-total // 8):
+        failures.append(
+            f"per-host byte model {per_host} != ceil(total/8)")
+    return failures
+
+
+if __name__ == "__main__":
+    rows = run()
+    bad = validate(rows)
+    print("PASS" if not bad else bad)
+    sys.exit(1 if bad else 0)

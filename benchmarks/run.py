@@ -91,6 +91,13 @@ _PRIMARY = {
                 lambda r: _rowmap(r)["serving_cache_ratio"], "higher"),
     "engine": ("engine_mean_wave_width",
                lambda r: _rowmap(r)["engine_mean_wave_width"], "higher"),
+    # NOT checkpoint_stall_ratio: at ~0.001 the ratio is all scheduler
+    # noise, where a +/-20% relative gate is meaningless; validate()
+    # gates it at the absolute 25% acceptance bound instead.  The
+    # per-host write-volume byte model is analytic and deterministic.
+    "checkpoint": ("checkpoint_bytes_per_host_8",
+                   lambda r: _rowmap(r)["checkpoint_bytes_per_host_8"],
+                   "lower"),
     # kernels has no primary: its maxerr rows sit at the fp noise floor,
     # where a +/-20% relative gate is meaningless (an XLA upgrade shifts
     # reduction order); bench_kernels.validate() gates correctness at an
@@ -198,9 +205,10 @@ def main() -> None:
             rows, fails = [], [f"crashed: {type(e).__name__}: {e}"]
         record(name, rows, fails)
 
-    from benchmarks import (bench_dist, bench_engine, bench_kernels,
-                            bench_memory, bench_pipeline, bench_raw_perf,
-                            bench_ring, bench_scalability, bench_serving)
+    from benchmarks import (bench_checkpoint, bench_dist, bench_engine,
+                            bench_kernels, bench_memory, bench_pipeline,
+                            bench_raw_perf, bench_ring, bench_scalability,
+                            bench_serving)
 
     def _std(mod):
         """run() then validate(rows) — the shape every bench shares."""
@@ -228,6 +236,9 @@ def main() -> None:
          _std(bench_pipeline)),
         ("serving", "\n## §9 serving: paged KV-cache + continuous batching",
          _std(bench_serving)),
+        ("checkpoint",
+         "\n## §12 sharded async checkpointing (save stall + byte model)",
+         _std(bench_checkpoint)),
         ("engine", "\n## Dependency engine", _std(bench_engine)),
         ("kernels", "\n## Pallas kernels (interpret-mode + oracle walls)",
          _std(bench_kernels)),

@@ -304,6 +304,43 @@ def pipeline_stage_bytes(cfg, *, n_stages: int, microbatches: int,
     }
 
 
+def checkpoint_bytes(leaves, axis_sizes=None, n_hosts: int = 1) -> dict:
+    """Bytes-per-host model of a sharded checkpoint save (DESIGN.md §12).
+
+    ``leaves``: iterable of ``(shape, dtype, spec)`` where ``spec`` has
+    one entry per dim — ``None`` or a tuple of mesh axis names (the
+    resolved PartitionSpec the leaf is laid out under).  ``axis_sizes``
+    maps axis name -> mesh size.
+
+    Each global array is written exactly once (replicas are
+    deduplicated at save time), so ``total_bytes`` is mesh-independent
+    and equals the on-disk sum of shard files EXACTLY (raw ``.bin``
+    shards carry no headers).  Sharding only divides the *work*: with
+    shards spread over ``n_hosts`` writers, each host serializes
+    ``bytes_per_host`` ~= total/n_hosts, which is the term that replaces
+    the old gather-to-host model (one host writing everything) in the
+    save-stall budget.
+    """
+    axis_sizes = dict(axis_sizes or {})
+    total = n_shards = max_shard = 0
+    for shape, dtype, spec in leaves:
+        b = nbytes(shape, dtype)
+        total += b
+        k = 1
+        for e in (spec or ()):
+            if e is None:
+                continue
+            axes = (e,) if isinstance(e, str) else tuple(e)
+            for a in axes:
+                k *= axis_sizes.get(a, 1)
+        n_shards += k
+        max_shard = max(max_shard, b // k)
+    n_hosts = max(int(n_hosts), 1)
+    return {"total_bytes": total, "n_shards": n_shards,
+            "max_shard_bytes": max_shard, "n_hosts": n_hosts,
+            "bytes_per_host": -(-total // n_hosts)}
+
+
 def naive_bytes(graph: Graph, shapes, dtypes) -> int:
     """Sum of all internal node outputs with no sharing (the Fig. 7 baseline)."""
     ext = {(n.uid, 0) for n in graph.variables}

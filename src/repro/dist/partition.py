@@ -88,6 +88,41 @@ def _path_keys(path):
     return [k.key for k in path if isinstance(k, DictKey)]
 
 
+def _rule_spec(keys, shape, names, sizes, stage_axis=None):
+    """The role rule table applied to ONE leaf identified by its dict
+    key path — shared by ``param_pspecs`` (live pytrees) and
+    ``spec_for_path`` (checkpoint-manifest paths)."""
+    name = keys[-1] if keys else ""
+    in_blocks = any(k == "blocks" for k in keys[:-1])
+    stacked = in_blocks or any(k == "encoder" for k in keys[:-1])
+    base_ndim = len(shape) - (1 if stacked else 0)
+    if name in ("wg", "wu", "wd") and "moe" in keys:
+        entries = _MOE_EXPERT_RULE
+    else:
+        entries = _PARAM_RULES.get(name)
+    if entries is None or len(entries) != base_ndim:
+        entries = _generic(base_ndim)
+    if stacked:
+        lead = stage_axis if (stage_axis and in_blocks) else None
+        entries = (lead,) + tuple(entries)
+    return _resolve(entries, shape, names, sizes)
+
+
+def spec_for_path(keys, shape, mesh, stage_axis: str | None = None):
+    """Single-leaf spec lookup by pytree key path (DESIGN.md §12).
+
+    The same rule table ``param_pspecs`` applies tree-wide, exposed for
+    the checkpoint layer's elastic restore, where a leaf arrives as a
+    manifest key path plus a global shape rather than a live pytree —
+    ``spec_for_path(["params", "blocks", "wq"], (4, 8, 2, 16), mesh)``
+    resolves against the *target* mesh, so the same checkpoint restores
+    onto any layout.  Works for optimizer-state mirrors too: the role
+    name is the last key, wherever the subtree is nested.
+    """
+    names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
+    return _rule_spec(list(keys), tuple(shape), names, sizes, stage_axis)
+
+
 def param_pspecs(cfg, params, mesh, stage_axis: str | None = None):
     """PartitionSpec pytree matching ``params`` (arrays or
     ShapeDtypeStructs), every sharded dim guaranteed to divide.
@@ -101,22 +136,8 @@ def param_pspecs(cfg, params, mesh, stage_axis: str | None = None):
     names, sizes = tuple(mesh.axis_names), dict(mesh.shape)
 
     def rule(path, leaf):
-        keys = _path_keys(path)
-        name = keys[-1] if keys else ""
-        in_blocks = any(k == "blocks" for k in keys[:-1])
-        stacked = in_blocks or any(k == "encoder" for k in keys[:-1])
-        shape = tuple(leaf.shape)
-        base_ndim = len(shape) - (1 if stacked else 0)
-        if name in ("wg", "wu", "wd") and "moe" in keys:
-            entries = _MOE_EXPERT_RULE
-        else:
-            entries = _PARAM_RULES.get(name)
-        if entries is None or len(entries) != base_ndim:
-            entries = _generic(base_ndim)
-        if stacked:
-            lead = stage_axis if (stage_axis and in_blocks) else None
-            entries = (lead,) + tuple(entries)
-        return _resolve(entries, shape, names, sizes)
+        return _rule_spec(_path_keys(path), tuple(leaf.shape), names,
+                          sizes, stage_axis)
 
     return tree_map_with_path(rule, params)
 

@@ -28,6 +28,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--init-from", metavar="CKPT", default=None,
+                    help="load params from a (possibly differently-"
+                         "sharded) training checkpoint directory instead "
+                         "of random init — the train->serve handoff "
+                         "(DESIGN.md §12).  Accepts a run dir of step_<n> "
+                         "checkpoints (latest wins) or one checkpoint dir")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV-cache + continuous batching "
                          "(DESIGN.md §9)")
@@ -69,7 +75,14 @@ def main():
     if args.reduced:
         cfg = reduced(cfg)
     model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    if args.init_from:
+        from repro.train import latest_checkpoint, load_checkpoint
+        ck = latest_checkpoint(args.init_from) or args.init_from
+        restored, step = load_checkpoint(ck)
+        params = restored.get("params", restored)
+        print(f"params from {ck} (step {step})")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
     max_len = args.prompt_len + args.new_tokens + 8
 
     rng = np.random.RandomState(0)

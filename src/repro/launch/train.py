@@ -31,6 +31,20 @@ def main():
     ap.add_argument("--vocab", type=int, default=0,
                     help="override vocab (reduced runs)")
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default="checkpoints",
+                    help="run directory for sharded step_<n> checkpoints "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--sync-checkpoint", action="store_true",
+                    help="serialize checkpoints on the step critical path "
+                         "instead of the async background writer")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore params+opt from the latest committed "
+                         "checkpoint in --checkpoint-dir (elastic: the "
+                         "target mesh may differ from the saved one) and "
+                         "continue from the next step")
+    ap.add_argument("--init-from", metavar="CKPT", default=None,
+                    help="warm-start params from a checkpoint directory "
+                         "(optimizer state fresh, step 0)")
     ap.add_argument("--mesh", choices=["host", "single", "multi"],
                     default="host")
     ap.add_argument("--overlap", action="store_true",
@@ -85,6 +99,8 @@ def main():
     tcfg = TrainConfig(lr=args.lr, total_steps=args.steps,
                        warmup_steps=max(args.steps // 10, 1),
                        checkpoint_every=args.checkpoint_every,
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_async=not args.sync_checkpoint,
                        grad_clip=5.0, overlap=args.overlap,
                        bucket_mb=args.bucket_mb,
                        pp_stages=args.pp_stages,
@@ -97,8 +113,31 @@ def main():
         from repro.obs import JsonlSink, MetricsLogger, StdoutSink
         logger = MetricsLogger([StdoutSink(), JsonlSink(args.metrics)])
     with ctx:
+        state, start_step = None, 0
+        if args.resume:
+            from repro.train import latest_checkpoint, load_checkpoint
+            ck = latest_checkpoint(args.checkpoint_dir)
+            if ck is None:
+                raise SystemExit(f"--resume: no committed checkpoint under "
+                                 f"{args.checkpoint_dir}")
+            # elastic: restored onto the AMBIENT mesh's rule table, which
+            # may differ from the mesh the checkpoint was saved under
+            restored, step = load_checkpoint(ck)
+            state, start_step = ((restored["params"], restored["opt"]),
+                                 step + 1)
+            print(f"resumed from {ck} (step {step})")
+        elif args.init_from:
+            from repro.train import load_checkpoint
+            restored, _ = load_checkpoint(args.init_from)
+            params = restored.get("params", restored)
+            print(f"warm-start params from {args.init_from}")
         tr = Trainer(cfg, tcfg, logger=logger)
-        tr.fit(iter(data))
+        if args.init_from and not args.resume:
+            state = (params, tr.optimizer.init(params))
+        it = iter(data)
+        for _ in range(start_step):     # fast-forward the token stream
+            next(it, None)
+        tr.fit(it, state=state, start_step=start_step)
     print("final:", tr.history[-1])
     if logger is not None:
         logger.close()

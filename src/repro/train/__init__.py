@@ -1,4 +1,10 @@
 from .trainer import Trainer, TrainConfig
-from .checkpoint import save_checkpoint, load_checkpoint
+from .checkpoint import (AsyncCheckpointer, CheckpointError, FailingFS,
+                         LocalFS, checkpoint_plan, find_checkpoints,
+                         latest_checkpoint, load_checkpoint,
+                         save_checkpoint, verify_checkpoint)
 
-__all__ = ["Trainer", "TrainConfig", "save_checkpoint", "load_checkpoint"]
+__all__ = ["Trainer", "TrainConfig", "save_checkpoint", "load_checkpoint",
+           "AsyncCheckpointer", "CheckpointError", "FailingFS", "LocalFS",
+           "checkpoint_plan", "find_checkpoints", "latest_checkpoint",
+           "verify_checkpoint"]

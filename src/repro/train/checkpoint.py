@@ -1,74 +1,679 @@
-"""Checkpointing: params/opt-state/step to a directory of .npy shards with
-a JSON manifest (pytree structure + dtypes), like MXNet's save/load (§2.1).
+"""Sharded checkpointing with async finalization and elastic restore
+(DESIGN.md §12; MXNet §2.1 save/load at fleet scale).
+
+The flat gather-everything-to-host ``.npy`` writer is gone.  A checkpoint
+is now a *directory of shard files plus a JSON manifest*:
+
+* **shard-by-shard save** — every leaf of the state pytree is written as
+  its device shards (one raw little-endian ``.bin`` per distinct shard;
+  replicas deduplicated by shard index, so each global array hits disk
+  exactly once).  The manifest records, per leaf: the pytree key path,
+  the global shape/dtype, the ``PartitionSpec`` the leaf was saved
+  under, and each shard's file / start offsets / shape / byte length /
+  crc32.  Raw ``.bin`` (no npy header) keeps on-disk data bytes exactly
+  equal to the analytic byte model (``core.memplan.checkpoint_bytes``).
+* **two-phase atomic commit** — all shard files are written (and
+  fsynced) first, then the manifest lands as ``manifest.json.tmp`` and
+  is ``os.replace``d to ``manifest.json``.  A crash anywhere mid-save
+  leaves a directory *without* a committed manifest, which
+  ``find_checkpoints`` skips — the previous checkpoint is never
+  corrupted and a torn one is never half-loaded.
+* **async finalization** (``AsyncCheckpointer``) — the step critical
+  path only snapshots device shards to host; serialization + commit run
+  on a background thread (spans ``ckpt_serialize`` / ``ckpt_commit`` on
+  the "checkpoint" obs track).  ``wait_for_checkpoint()`` drains the
+  queue and re-raises any background failure.
+* **elastic restore** — ``load_checkpoint`` reconstructs each global
+  array under the *target* mesh's PartitionSpec rule table
+  (``dist.partition.spec_for_path``): every target device shard is
+  assembled from exactly the saved shard regions that overlap its index
+  (``jax.make_array_from_callback`` + memory-mapped shard files), so a
+  dp×pp=2×2 checkpoint restores onto 1×4, a pipelined checkpoint loads
+  into an unpipelined mesh, and a trained checkpoint loads straight
+  into a serving engine on a single device.
+
+All checkpoint bytes flow through an injectable filesystem seam
+(``LocalFS``); ``FailingFS`` errors — or SIGKILLs the process — after N
+bytes, which is how the crash/fault-injection suite tears saves
+deterministically mid-write.
 """
 from __future__ import annotations
 
+import io
 import json
+import os
+import queue
+import shutil
+import signal
+import threading
+import zlib
 from pathlib import Path
 
 import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import (DictKey, FlattenedIndexKey, GetAttrKey,
+                           SequenceKey)
+
+from repro import obs
+
+MANIFEST = "manifest.json"
+FORMAT = "repro-sharded-ckpt"
+VERSION = 2
 
 
-def _flatten(tree):
-    leaves, treedef = jax.tree.flatten(tree)
-    return leaves, treedef
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or restored."""
 
 
-def save_checkpoint(path: str, state: dict, step: int | None = None):
-    p = Path(path)
-    p.mkdir(parents=True, exist_ok=True)
-    leaves, treedef = _flatten(state)
-    manifest = {"treedef": str(treedef), "n_leaves": len(leaves),
-                "step": int(step) if step is not None else None,
-                "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-                "shapes": [list(np.asarray(l).shape) for l in leaves]}
-    for i, leaf in enumerate(leaves):
-        np.save(p / f"leaf_{i}.npy", np.asarray(leaf))
-    (p / "manifest.json").write_text(json.dumps(manifest))
-    return p
+# ---------------------------------------------------------------------------
+# filesystem seam (fault injection)
+
+
+class LocalFS:
+    """Filesystem layer every checkpoint byte flows through.
+
+    The indirection exists so tests (and the fault-injection bench gate)
+    can tear a save mid-write deterministically — see ``FailingFS``.
+    """
+
+    def mkdir(self, path):
+        Path(path).mkdir(parents=True, exist_ok=True)
+
+    def write_bytes(self, path, data: bytes):
+        with open(path, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def replace(self, tmp, dst):
+        os.replace(tmp, dst)
+
+
+class FailingFS(LocalFS):
+    """Injectable fault: fail after ``fail_after_bytes`` total bytes.
+
+    The partial write up to the budget DOES land on disk (and is
+    fsynced) before the fault fires, so the torn state is exactly what a
+    crashed writer leaves behind.  ``kill=True`` SIGKILLs the process
+    instead of raising — the subprocess crash harness's deterministic
+    "writer died mid-save" trigger.
+    """
+
+    def __init__(self, fail_after_bytes: int, kill: bool = False):
+        self.fail_after_bytes = int(fail_after_bytes)
+        self.kill = kill
+        self.written = 0
+
+    def write_bytes(self, path, data: bytes):
+        room = self.fail_after_bytes - self.written
+        if room >= len(data):
+            super().write_bytes(path, data)
+            self.written += len(data)
+            return
+        if room > 0:
+            super().write_bytes(path, data[:room])
+        self.written = self.fail_after_bytes
+        if self.kill:
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise OSError(f"FailingFS: fault injected after "
+                      f"{self.fail_after_bytes} bytes (writing {path})")
+
+
+# ---------------------------------------------------------------------------
+# pytree key paths <-> JSON
+
+
+def _path_entries(path) -> list:
+    """JSON-serializable form of a jax key path: ``["k", key]`` for dict
+    keys, ``["i", idx]`` for sequence entries, ``["a", name]`` for
+    attributes (NamedTuples / dataclasses)."""
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(["k", k.key])
+        elif isinstance(k, SequenceKey):
+            out.append(["i", k.idx])
+        elif isinstance(k, GetAttrKey):
+            out.append(["a", k.name])
+        elif isinstance(k, FlattenedIndexKey):
+            out.append(["i", k.key])
+        else:  # unknown key kind: repr is enough for comparison/errors
+            out.append(["r", repr(k)])
+    return out
+
+
+def _entries_str(entries) -> str:
+    """Human-readable ``['params']['blocks']['wq']`` form."""
+    if not entries:
+        return "<root>"
+    parts = []
+    for kind, v in entries:
+        parts.append(f".{v}" if kind == "a" else f"[{v!r}]")
+    return "".join(parts)
 
 
 def _leaf_name(path) -> str:
-    """Human-readable pytree path for error messages."""
     return jax.tree_util.keystr(path) or "<root>"
 
 
-def load_checkpoint(path: str, like: dict):
-    """Restore into the structure of ``like``.
+def _key_names(entries) -> list:
+    """Dict-key strings along a manifest path (partition-rule lookup)."""
+    return [v for kind, v in entries if kind == "k"]
 
-    Every leaf is validated against ``like`` — shape and dtype — and a
-    ``ValueError`` naming the offending leaf path is raised on mismatch,
-    instead of silently mis-restoring into the wrong structure (e.g.
-    loading a reduced-config checkpoint into a full-size model, or fp32
-    momentum into bf16 params).
+
+def _unflatten_from_entries(paths, leaves):
+    """Rebuild a nested dict/list pytree from manifest key paths — the
+    template-free restore (``load_checkpoint(path)`` with no ``like``).
+    Only dict and sequence keys are supported; tuples come back as
+    lists."""
+    if not paths or not paths[0]:
+        return leaves[0] if leaves else {}
+    root = {} if paths[0][0][0] == "k" else []
+
+    def _set(container, entries, value):
+        kind, key = entries[0]
+        if kind not in ("k", "i"):
+            raise CheckpointError(
+                f"cannot rebuild a pytree containing {_entries_str(entries)} "
+                f"without a template — pass `like=`")
+        last = len(entries) == 1
+        if isinstance(container, list):
+            while len(container) <= key:
+                container.append(None)
+        if last:
+            container[key] = value
+            return
+        nxt_kind = entries[1][0]
+        if isinstance(container, list):
+            if container[key] is None:
+                container[key] = {} if nxt_kind == "k" else []
+            _set(container[key], entries[1:], value)
+        else:
+            if key not in container:
+                container[key] = {} if nxt_kind == "k" else []
+            _set(container[key], entries[1:], value)
+
+    for entries, leaf in zip(paths, leaves):
+        _set(root, entries, leaf)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec <-> JSON
+
+
+def _spec_to_json(spec: P, ndim: int) -> list:
+    entries = list(spec) + [None] * (ndim - len(spec))
+    out = []
+    for e in entries[:ndim]:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append([e])
+        else:
+            out.append(list(e))
+    return out
+
+
+def _spec_from_json(entries) -> P:
+    return P(*[None if e is None else (e[0] if len(e) == 1 else tuple(e))
+               for e in entries])
+
+
+def _leaf_spec(x) -> P:
+    sh = getattr(x, "sharding", None)
+    if isinstance(sh, NamedSharding):
+        return sh.spec
+    return P()
+
+
+def _leaf_axis_sizes(x) -> dict:
+    sh = getattr(x, "sharding", None)
+    if isinstance(sh, NamedSharding):
+        return dict(sh.mesh.shape)
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# snapshot (the only step on the save critical path)
+
+
+def _unique_shards(x):
+    """``[(start_offsets, host_ndarray)]`` covering the global array
+    exactly once: addressable shards deduplicated by index (replicas of
+    a replicated/partially-replicated leaf share their index tuple)."""
+    if not hasattr(x, "addressable_shards"):
+        arr = np.asarray(x)
+        return [((0,) * arr.ndim, arr)]
+    seen, out = set(), []
+    for s in x.addressable_shards:
+        start = tuple(int(sl.start or 0) for sl in s.index)
+        if start in seen:
+            continue
+        seen.add(start)
+        out.append((start, np.asarray(s.data)))
+    return out
+
+
+def snapshot_state(state) -> list[dict]:
+    """Host-side snapshot of every leaf's shards + metadata.
+
+    This is the ONLY work ``AsyncCheckpointer.save`` does on the caller
+    thread: device->host copies of the addressable shards (jax buffers
+    are immutable, so on CPU backends the "copy" is typically a view).
+    Everything downstream (serialization, commit) runs off-thread.
     """
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    snap = []
+    for kpath, leaf in flat:
+        shards = _unique_shards(leaf)
+        gshape = tuple(int(d) for d in getattr(leaf, "shape",
+                                               shards[0][1].shape))
+        dtype = str(np.dtype(getattr(leaf, "dtype", shards[0][1].dtype)))
+        snap.append({"path": _path_entries(kpath),
+                     "keystr": _leaf_name(kpath),
+                     "shape": list(gshape), "dtype": dtype,
+                     "spec": _spec_to_json(_leaf_spec(leaf), len(gshape)),
+                     "axis_sizes": _leaf_axis_sizes(leaf),
+                     "shards": shards})
+    return snap
+
+
+# ---------------------------------------------------------------------------
+# serialize + two-phase commit (background-thread side)
+
+
+def _write_shards(p: Path, snap: list[dict], fs: LocalFS) -> list[dict]:
+    """Phase 1: every shard as raw C-order little-endian bytes, fsynced."""
+    fs.mkdir(p)
+    leaves_meta = []
+    for i, leaf in enumerate(snap):
+        shard_meta = []
+        for j, (start, arr) in enumerate(leaf["shards"]):
+            fname = f"l{i}_s{j}.bin"
+            data = np.ascontiguousarray(arr).tobytes()
+            fs.write_bytes(p / fname, data)
+            shard_meta.append({"file": fname, "start": list(start),
+                               "shape": list(arr.shape),
+                               "nbytes": len(data),
+                               "crc32": zlib.crc32(data)})
+        leaves_meta.append({k: leaf[k] for k in
+                            ("path", "keystr", "shape", "dtype", "spec",
+                             "axis_sizes")} | {"shards": shard_meta})
+    return leaves_meta
+
+
+def _commit(p: Path, leaves_meta: list[dict], step, fs: LocalFS):
+    """Phase 2: the atomic rename that makes the checkpoint exist."""
+    manifest = {"format": FORMAT, "version": VERSION,
+                "step": int(step) if step is not None else None,
+                "n_leaves": len(leaves_meta), "leaves": leaves_meta}
+    fs.write_bytes(p / (MANIFEST + ".tmp"),
+                   json.dumps(manifest).encode())
+    fs.replace(p / (MANIFEST + ".tmp"), p / MANIFEST)
+
+
+def save_checkpoint(path: str, state: dict, step: int | None = None,
+                    fs: LocalFS | None = None) -> Path:
+    """Synchronous sharded save into ``path`` (a single checkpoint dir).
+
+    Shard files first, manifest rename last — interrupting this call at
+    any point leaves either the old committed checkpoint or a torn
+    (manifest-less) directory that loaders skip, never a half-written
+    one that parses.
+    """
+    fs = fs or LocalFS()
     p = Path(path)
-    manifest_file = p / "manifest.json"
-    if not manifest_file.exists():
-        raise FileNotFoundError(f"no checkpoint manifest at {manifest_file}")
-    manifest = json.loads(manifest_file.read_text())
-    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
-    if manifest["n_leaves"] != len(flat):
+    snap = snapshot_state(state)
+    _commit(p, _write_shards(p, snap, fs), step, fs)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# discovery / integrity
+
+
+def _read_manifest(p: Path) -> dict:
+    mf = p / MANIFEST
+    if not mf.exists():
+        raise FileNotFoundError(f"no checkpoint manifest at {mf} — torn "
+                                f"or missing checkpoint")
+    m = json.loads(mf.read_text())
+    if m.get("format") != FORMAT:
+        raise CheckpointError(f"{mf}: not a {FORMAT} manifest "
+                              f"(format={m.get('format')!r})")
+    return m
+
+
+def verify_checkpoint(path) -> tuple[bool, str]:
+    """Deep integrity check: committed manifest + every shard file
+    present with the recorded byte length and crc32."""
+    p = Path(path)
+    try:
+        m = _read_manifest(p)
+    except (FileNotFoundError, CheckpointError, ValueError) as e:
+        return False, str(e)
+    for lf in m["leaves"]:
+        for s in lf["shards"]:
+            f = p / s["file"]
+            if not f.exists():
+                return False, f"missing shard file {f}"
+            data = f.read_bytes()
+            if len(data) != s["nbytes"]:
+                return False, (f"truncated shard {f}: {len(data)} bytes "
+                               f"!= recorded {s['nbytes']}")
+            if zlib.crc32(data) != s["crc32"]:
+                return False, f"crc mismatch in shard {f}"
+    return True, "ok"
+
+
+def find_checkpoints(root) -> list[tuple[int, Path]]:
+    """Committed ``step_*`` checkpoints under ``root`` as ascending
+    ``(step, path)``.  Torn directories — no committed manifest, or
+    shard files missing / with the wrong length — are skipped, never
+    returned."""
+    root = Path(root)
+    out = []
+    if not root.is_dir():
+        return out
+    for d in root.glob("step_*"):
+        try:
+            m = _read_manifest(d)
+        except (FileNotFoundError, CheckpointError, ValueError):
+            continue
+        ok = all((d / s["file"]).is_file()
+                 and (d / s["file"]).stat().st_size == s["nbytes"]
+                 for lf in m["leaves"] for s in lf["shards"])
+        if not ok:
+            continue
+        step = m.get("step")
+        if step is None:
+            try:
+                step = int(d.name.split("_", 1)[1])
+            except ValueError:
+                continue
+        out.append((int(step), d))
+    return sorted(out)
+
+
+def latest_checkpoint(root) -> Path | None:
+    """Newest committed checkpoint directory under ``root`` (or None)."""
+    found = find_checkpoints(root)
+    return found[-1][1] if found else None
+
+
+# ---------------------------------------------------------------------------
+# elastic restore
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    # ml_dtypes (imported by jax) registers bfloat16/fp8 names with numpy
+    return np.dtype(name)
+
+
+def _assemble(p: Path, meta: dict, index) -> np.ndarray:
+    """The resharding core: materialize the global-array region ``index``
+    (a tuple of slices, one per dim) by pasting every saved shard's
+    overlap with it.  Shard files are memory-mapped, so only the
+    overlapping bytes are read — restoring a 1/N target shard touches
+    ~1/N of the checkpoint regardless of the save-time layout."""
+    gshape = tuple(meta["shape"])
+    dtype = _resolve_dtype(meta["dtype"])
+    t_lo = [int(sl.start or 0) for sl in index]
+    t_hi = [int(sl.stop) if sl.stop is not None else gshape[d]
+            for d, sl in enumerate(index)]
+    tshape = tuple(h - l for l, h in zip(t_lo, t_hi))
+    out = np.empty(tshape, dtype)
+    filled = 0
+    for s in meta["shards"]:
+        s_lo = [int(x) for x in s["start"]]
+        s_hi = [lo + int(n) for lo, n in zip(s_lo, s["shape"])]
+        lo = [max(a, b) for a, b in zip(t_lo, s_lo)]
+        hi = [min(a, b) for a, b in zip(t_hi, s_hi)]
+        if any(l >= h for l, h in zip(lo, hi)):
+            continue
+        src = np.memmap(p / s["file"], dtype=dtype, mode="r",
+                        shape=tuple(s["shape"]))
+        dst_ix = tuple(slice(l - tl, h - tl)
+                       for l, h, tl in zip(lo, hi, t_lo))
+        src_ix = tuple(slice(l - sl, h - sl)
+                       for l, h, sl in zip(lo, hi, s_lo))
+        out[dst_ix] = src[src_ix]
+        n = 1
+        for l, h in zip(lo, hi):
+            n *= h - l
+        filled += n
+    want = 1
+    for d in tshape:
+        want *= d
+    if filled != want:
+        raise CheckpointError(
+            f"saved shards cover {filled}/{want} elements of "
+            f"{_entries_str(meta['path'])}{list(index)} — overlapping or "
+            f"missing shard regions in the manifest")
+    return out
+
+
+def _full_index(shape):
+    return tuple(slice(0, d) for d in shape)
+
+
+def _target_sharding(meta: dict, mesh) -> NamedSharding | None:
+    """Target layout for one leaf under ``mesh`` via the partition rule
+    table, looked up by the leaf's pytree key path (the *saved* spec is
+    deliberately ignored — restore is elastic onto the target mesh)."""
+    if mesh is None or mesh.size == 1:
+        return None
+    from repro.dist.partition import spec_for_path
+    stage = "stage" if "stage" in mesh.axis_names else None
+    spec = spec_for_path(_key_names(meta["path"]), tuple(meta["shape"]),
+                         mesh, stage_axis=stage)
+    return NamedSharding(mesh, spec)
+
+
+def _restore_leaf(p: Path, meta: dict, sharding: NamedSharding | None):
+    import jax.numpy as jnp
+    gshape = tuple(meta["shape"])
+    if sharding is None:
+        return jnp.asarray(_assemble(p, meta, _full_index(gshape)))
+    return jax.make_array_from_callback(
+        gshape, sharding, lambda idx: _assemble(p, meta, idx))
+
+
+def _validate_like(p: Path, leaves_meta: list[dict], like):
+    """Structural + shape/dtype validation against a template pytree,
+    erroring with the FIRST diverging pytree path (never a blind
+    ``str(treedef)`` string compare)."""
+    flat = jax.tree_util.tree_flatten_with_path(like)[0]
+    if len(leaves_meta) != len(flat):
         raise ValueError(
-            f"checkpoint at {p} has {manifest['n_leaves']} leaves but the "
-            f"target structure has {len(flat)} — wrong checkpoint for this "
-            f"model/optimizer state?")
-    loaded = []
-    for i, (kpath, ref) in enumerate(flat):
-        arr = np.load(p / f"leaf_{i}.npy")
-        # shape/dtype come straight off the leaf — no host materialization
-        # of (possibly sharded, multi-GB) target state just to compare
-        if tuple(arr.shape) != tuple(ref.shape):
+            f"checkpoint at {p} has {len(leaves_meta)} leaves but the "
+            f"target structure has {len(flat)} — wrong checkpoint for "
+            f"this model/optimizer state?")
+    for i, ((kpath, ref), meta) in enumerate(zip(flat, leaves_meta)):
+        if _path_entries(kpath) != [list(e) for e in meta["path"]]:
+            raise ValueError(
+                f"checkpoint/target tree structures diverge at leaf {i}: "
+                f"saved {_entries_str(meta['path'])} != target "
+                f"{_leaf_name(kpath)}")
+        if tuple(meta["shape"]) != tuple(ref.shape):
             raise ValueError(
                 f"checkpoint leaf {i} ({_leaf_name(kpath)}): saved shape "
-                f"{tuple(arr.shape)} != expected {tuple(ref.shape)} — the "
-                f"checkpoint was written for a different configuration")
-        if arr.dtype != np.dtype(ref.dtype):
+                f"{tuple(meta['shape'])} != expected {tuple(ref.shape)} — "
+                f"the checkpoint was written for a different configuration")
+        if _resolve_dtype(meta["dtype"]) != np.dtype(ref.dtype):
             raise ValueError(
                 f"checkpoint leaf {i} ({_leaf_name(kpath)}): saved dtype "
-                f"{arr.dtype} != expected {ref.dtype} — refusing to cast "
-                f"silently; convert explicitly if this is intended")
-        loaded.append(arr)
-    state = jax.tree.unflatten(treedef, loaded)
+                f"{meta['dtype']} != expected {np.dtype(ref.dtype)} — "
+                f"refusing to cast silently; convert explicitly if this "
+                f"is intended")
+
+
+def load_checkpoint(path: str, like=None, *, mesh=None, specs=None):
+    """Elastic restore.  Returns ``(state, step)``.
+
+    * ``like`` (optional): template pytree — structure, shapes and
+      dtypes are validated leaf-by-leaf with the first diverging pytree
+      path named in the error.  Without it, the pytree is rebuilt from
+      the manifest's key paths (nested dicts/lists).
+    * target layout: ``specs`` (a PartitionSpec pytree) if given; else
+      the ambient-or-passed ``mesh``'s partition rule table by leaf path
+      (``dist.partition.spec_for_path``); else unsharded host arrays.
+      The mesh the checkpoint was SAVED under never constrains the
+      restore — that is the elasticity.
+    """
+    p = Path(path)
+    manifest = _read_manifest(p)
+    leaves_meta = manifest["leaves"]
+    if like is not None:
+        _validate_like(p, leaves_meta, like)
+    if mesh is None:
+        from repro.dist.compat import current_mesh
+        mesh = current_mesh()
+    flat_specs = None
+    if specs is not None:
+        flat_specs = jax.tree.flatten(
+            specs, is_leaf=lambda s: isinstance(s, P))[0]
+        if len(flat_specs) != len(leaves_meta):
+            raise ValueError(f"specs pytree has {len(flat_specs)} leaves, "
+                             f"checkpoint has {len(leaves_meta)}")
+    leaves = []
+    for i, meta in enumerate(leaves_meta):
+        if flat_specs is not None and mesh is not None:
+            sharding = NamedSharding(mesh, flat_specs[i])
+        else:
+            sharding = _target_sharding(meta, mesh)
+        leaves.append(_restore_leaf(p, meta, sharding))
+    if like is not None:
+        treedef = jax.tree.flatten(like)[1]
+        state = jax.tree.unflatten(treedef, leaves)
+    else:
+        state = _unflatten_from_entries(
+            [meta["path"] for meta in leaves_meta], leaves)
     return state, manifest.get("step")
+
+
+# ---------------------------------------------------------------------------
+# byte model hook (core.memplan.checkpoint_bytes cross-validation)
+
+
+def checkpoint_plan(state, n_hosts: int = 1) -> dict:
+    """Analytic bytes-per-host model of saving ``state`` — the
+    ``core.memplan.checkpoint_bytes`` inputs derived from the live
+    arrays' shardings.  ``total_bytes`` equals the on-disk sum of shard
+    files EXACTLY (raw .bin shards carry no headers)."""
+    from repro.core.memplan import checkpoint_bytes
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    leaves, axis_sizes = [], {}
+    for _, leaf in flat:
+        arr = np.asarray(leaf) if not hasattr(leaf, "shape") else leaf
+        spec = _leaf_spec(leaf)
+        entries = _spec_to_json(spec, len(arr.shape))
+        leaves.append((tuple(arr.shape), str(np.dtype(arr.dtype)),
+                       tuple(None if e is None else tuple(e)
+                             for e in entries)))
+        axis_sizes.update(_leaf_axis_sizes(leaf))
+    return checkpoint_bytes(leaves, axis_sizes, n_hosts=n_hosts)
+
+
+# ---------------------------------------------------------------------------
+# async finalization
+
+
+class AsyncCheckpointer:
+    """Checkpoint manager over a run directory: ``root/step_<n>/``.
+
+    ``save(state, step)`` snapshots device shards on the caller thread
+    (the ONLY stall the training step sees) and hands serialization +
+    two-phase commit to a daemon worker; retention prunes committed
+    checkpoints beyond ``keep``.  ``async_save=False`` degrades to the
+    synchronous writer (the bench baseline).  A failed background save
+    is re-raised — wrapped in ``CheckpointError`` — by the next
+    ``save()`` / ``wait_for_checkpoint()``.
+    """
+
+    def __init__(self, root, *, keep: int = 3, async_save: bool = True,
+                 fs: LocalFS | None = None):
+        self.root = Path(root)
+        self.keep = keep
+        self.async_save = async_save
+        self.fs = fs or LocalFS()
+        self._q: queue.Queue = queue.Queue()
+        self._err: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    def step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    # -- caller side --------------------------------------------------------
+    def save(self, state, step: int) -> Path:
+        self._raise_pending()
+        rec = obs.get_recorder()
+        with rec.span("ckpt_snapshot", cat="ckpt", track="checkpoint",
+                      step=step):
+            snap = snapshot_state(state)
+        path = self.step_dir(step)
+        if not self.async_save:
+            with rec.span("ckpt_serialize", cat="ckpt", track="checkpoint",
+                          step=step):
+                meta = _write_shards(path, snap, self.fs)
+            with rec.span("ckpt_commit", cat="ckpt", track="checkpoint",
+                          step=step):
+                _commit(path, meta, step, self.fs)
+            self._prune()
+            return path
+        self._ensure_thread()
+        self._q.put((snap, path, step))
+        return path
+
+    def wait_for_checkpoint(self):
+        """Block until every enqueued save is committed (or failed)."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self):
+        self.wait_for_checkpoint()
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join(timeout=60)
+            self._thread = None
+
+    # -- worker side --------------------------------------------------------
+    def _ensure_thread(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._worker,
+                                            name="ckpt-writer", daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        rec = obs.get_recorder()
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            snap, path, step = item
+            try:
+                with rec.span("ckpt_serialize", cat="ckpt",
+                              track="checkpoint", step=step):
+                    meta = _write_shards(path, snap, self.fs)
+                with rec.span("ckpt_commit", cat="ckpt", track="checkpoint",
+                              step=step):
+                    _commit(path, meta, step, self.fs)
+                self._prune()
+            except BaseException as e:  # noqa: BLE001 — surfaced at wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise CheckpointError(
+                f"async checkpoint save failed: {err}") from err
+
+    def _prune(self):
+        found = find_checkpoints(self.root)
+        for _, d in found[:-self.keep] if self.keep else []:
+            shutil.rmtree(d, ignore_errors=True)

@@ -27,7 +27,7 @@ from repro.obs import MetricsLogger
 from repro.optim import sgd_momentum, warmup_cosine
 from repro.optim.optimizers import Optimizer
 
-from .checkpoint import save_checkpoint
+from .checkpoint import AsyncCheckpointer
 
 
 @dataclass
@@ -40,6 +40,12 @@ class TrainConfig:
     log_every: int = 10
     checkpoint_every: int = 0
     checkpoint_dir: str = "checkpoints"
+    # sharded checkpointing (DESIGN.md §12): async finalization keeps
+    # only the device->host shard snapshot on the step critical path;
+    # serialization + two-phase commit run on a background thread.
+    # checkpoint_keep prunes committed step_* dirs beyond the newest N.
+    checkpoint_async: bool = True
+    checkpoint_keep: int = 3
     grad_clip: float = 1.0
     # bucketed gradient sync emitted inside backward (DESIGN.md §7):
     # the §4 lazy-push analogue on the jit path. Numerically identical to
@@ -77,6 +83,12 @@ class Trainer:
             lr=tcfg.lr, mu=tcfg.mu, weight_decay=tcfg.weight_decay)
         self.schedule = warmup_cosine(tcfg.warmup_steps, tcfg.total_steps)
         self.history: list[dict] = []
+        # sharded checkpoint manager (DESIGN.md §12), created only when
+        # checkpointing is on — fit() enqueues, exit waits for the commit
+        self.checkpointer = (AsyncCheckpointer(
+            tcfg.checkpoint_dir, keep=tcfg.checkpoint_keep,
+            async_save=tcfg.checkpoint_async)
+            if tcfg.checkpoint_every else None)
 
     # ------------------------------------------------------------------
     def init_state(self, seed: int = 0):
@@ -130,7 +142,8 @@ class Trainer:
         return step
 
     # ------------------------------------------------------------------
-    def fit(self, data: Iterator, seed: int = 0, state=None):
+    def fit(self, data: Iterator, seed: int = 0, state=None,
+            start_step: int = 0):
         """jit path.
 
         Per-step obs (DESIGN.md §11): ``data_wait`` / ``step`` /
@@ -139,14 +152,23 @@ class Trainer:
         dict, only on log steps — per-item ``float(v)`` inside the loop
         forced a device sync per metric on every logged step, blocking
         dispatch of the next step's work.
+
+        Checkpointing (DESIGN.md §12) is an *enqueue*: the span covers
+        only the device->host shard snapshot; the write + atomic commit
+        happen on the checkpointer's background thread and are flushed
+        by ``wait_for_checkpoint()`` before fit returns.
+
+        ``start_step`` resumes a run: pass the restored ``state`` and
+        the step after the checkpoint's; the caller fast-forwards
+        ``data`` to the same position.
         """
         params, opt_state = state or self.init_state(seed)
         step_fn = self._make_step()
         rec = obs.get_recorder()
         t0 = time.time()
-        t_log, i_log = t0, 0          # steps_per_s window since last log
+        t_log, i_log = t0, start_step    # steps_per_s window since last log
         data = iter(data)
-        i = 0
+        i = start_step
         while i < self.tcfg.total_steps:
             with rec.span("data_wait", cat="train", track="trainer", step=i):
                 batch = next(data, None)
@@ -175,11 +197,18 @@ class Trainer:
                     and i and i % self.tcfg.checkpoint_every == 0):
                 with rec.span("checkpoint", cat="train", track="trainer",
                               step=i):
-                    save_checkpoint(self.tcfg.checkpoint_dir,
-                                    {"params": params, "opt": opt_state},
-                                    step=i)
+                    self.checkpointer.save(
+                        {"params": params, "opt": opt_state}, step=i)
             i += 1
+        if self.checkpointer is not None:
+            with rec.span("checkpoint_wait", cat="train", track="trainer"):
+                self.checkpointer.wait_for_checkpoint()
         return params, opt_state
+
+    def wait_for_checkpoint(self):
+        """Flush pending async checkpoint saves (re-raises failures)."""
+        if self.checkpointer is not None:
+            self.checkpointer.wait_for_checkpoint()
 
     # ------------------------------------------------------------------
     def fit_kvstore(self, data: Iterator, kv, n_workers: int = 1,

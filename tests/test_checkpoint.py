@@ -1,11 +1,21 @@
-"""load_checkpoint validation: clear errors on structure/shape/dtype
-mismatch instead of silent mis-restores (ISSUE 2 satellite)."""
+"""Sharded checkpoint subsystem (ISSUE 7 / DESIGN.md §12): manifest
+validation (structural, shape, dtype — naming the first diverging leaf
+path), two-phase commit + torn-checkpoint discovery, async finalization,
+retention, the byte model, and the async-save obs track."""
+import json
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train import load_checkpoint, save_checkpoint
+from repro.core.memplan import checkpoint_bytes
+from repro.obs import TraceRecorder, get_recorder, set_recorder
+from repro.train import (AsyncCheckpointer, CheckpointError, FailingFS,
+                         checkpoint_plan, find_checkpoints,
+                         latest_checkpoint, load_checkpoint,
+                         save_checkpoint, verify_checkpoint)
 
 
 def _state():
@@ -14,14 +24,23 @@ def _state():
             "step_scale": jnp.asarray(0.5, jnp.float32)}
 
 
+def _assert_state_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + validation (the PR-2 guarantees, kept)
+
 def test_roundtrip_preserves_values(tmp_path):
     state = _state()
     save_checkpoint(str(tmp_path / "ck"), state, step=3)
     like = jax.tree.map(jnp.zeros_like, state)
     restored, step = load_checkpoint(str(tmp_path / "ck"), like)
     assert step == 3
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_state_equal(restored, state)
 
 
 def test_missing_manifest_is_clear(tmp_path):
@@ -52,3 +71,228 @@ def test_dtype_mismatch_refuses_silent_cast(tmp_path):
     like["params"]["b"] = jnp.ones(3, jnp.bfloat16)  # wrong dtype
     with pytest.raises(ValueError, match="dtype"):
         load_checkpoint(str(tmp_path / "ck"), like)
+
+
+# ---------------------------------------------------------------------------
+# structural validation by key path (satellite: no more str(treedef))
+
+def test_structure_divergence_names_first_diverging_path(tmp_path):
+    """Same leaf COUNT, different key names: the error points at the
+    first diverging pytree path, saved vs target."""
+    save_checkpoint(str(tmp_path / "ck"), _state())
+    like = {"params": {"w": jnp.zeros((2, 3), jnp.float32),
+                       "bias": jnp.ones(3, jnp.float32)},   # was "b"
+            "step_scale": jnp.asarray(0.5, jnp.float32)}
+    with pytest.raises(ValueError) as e:
+        load_checkpoint(str(tmp_path / "ck"), like)
+    msg = str(e.value)
+    assert "diverge" in msg and "'b'" in msg and "'bias'" in msg
+
+
+def test_nesting_divergence_detected(tmp_path):
+    """A leaf moved to another subtree diverges structurally even though
+    shapes/dtypes/count all match."""
+    save_checkpoint(str(tmp_path / "ck"), _state())
+    like = {"params": {"w": jnp.zeros((2, 3), jnp.float32)},
+            "extra": {"b": jnp.ones(3, jnp.float32)},
+            "step_scale": jnp.asarray(0.5, jnp.float32)}
+    with pytest.raises(ValueError, match="diverge"):
+        load_checkpoint(str(tmp_path / "ck"), like)
+
+
+def test_template_free_restore_rebuilds_structure(tmp_path):
+    """``load_checkpoint(path)`` with no template rebuilds the nested
+    dict pytree from the manifest's key paths — what --init-from and the
+    serve handoff use."""
+    state = _state()
+    save_checkpoint(str(tmp_path / "ck"), state, step=9)
+    restored, step = load_checkpoint(str(tmp_path / "ck"))
+    assert step == 9
+    assert jax.tree.structure(restored) == jax.tree.structure(state)
+    _assert_state_equal(restored, state)
+
+
+# ---------------------------------------------------------------------------
+# manifest format / two-phase commit
+
+def test_manifest_records_paths_shapes_dtypes_specs(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"), _state(), step=1)
+    man = json.loads((p / "manifest.json").read_text())
+    assert man["format"] == "repro-sharded-ckpt"
+    assert man["n_leaves"] == 3
+    by = {lf["keystr"]: lf for lf in man["leaves"]}
+    w = by["['params']['w']"]
+    assert w["shape"] == [2, 3] and w["dtype"] == "float32"
+    assert len(w["spec"]) == 2                 # one entry per dim
+    for lf in man["leaves"]:                   # every shard fully described
+        for s in lf["shards"]:
+            assert (p / s["file"]).stat().st_size == s["nbytes"]
+            assert set(s) >= {"file", "start", "shape", "nbytes", "crc32"}
+    assert not (p / "manifest.json.tmp").exists()   # tmp was renamed away
+
+
+def test_find_checkpoints_skips_torn_and_orders_by_step(tmp_path):
+    root = tmp_path / "run"
+    mgr = AsyncCheckpointer(root, keep=10, async_save=False)
+    for s in (2, 10, 1):
+        mgr.save(_state(), step=s)
+    # torn: shard files but no committed manifest
+    torn = root / "step_00000011"
+    torn.mkdir()
+    (torn / "l0_s0.bin").write_bytes(b"\x00" * 8)
+    (torn / "manifest.json.tmp").write_text("{}")
+    assert [s for s, _ in find_checkpoints(root)] == [1, 2, 10]
+    assert latest_checkpoint(root).name == "step_00000010"
+
+
+def test_truncated_shard_after_commit_is_detected(tmp_path):
+    """Even a COMMITTED checkpoint whose shard file was later truncated
+    (disk loss) is skipped by discovery and flagged by the deep check."""
+    root = tmp_path / "run"
+    mgr = AsyncCheckpointer(root, keep=10, async_save=False)
+    p1 = mgr.save(_state(), step=1)
+    p2 = mgr.save(_state(), step=2)
+    victim = next(p2.glob("l0_*.bin"))
+    victim.write_bytes(victim.read_bytes()[:-2])
+    assert latest_checkpoint(root) == p1       # torn step 2 skipped
+    ok, reason = verify_checkpoint(p2)
+    assert not ok and "truncated" in reason
+    ok, _ = verify_checkpoint(p1)
+    assert ok
+
+
+def test_bitflip_in_shard_caught_by_crc(tmp_path):
+    p = save_checkpoint(str(tmp_path / "ck"), _state(), step=1)
+    victim = next(p.glob("l0_*.bin"))
+    raw = bytearray(victim.read_bytes())
+    raw[0] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    ok, reason = verify_checkpoint(p)
+    assert not ok and "crc" in reason
+
+
+# ---------------------------------------------------------------------------
+# FailingFS (the injectable fault)
+
+def test_failing_fs_tears_save_and_previous_survives(tmp_path):
+    root = tmp_path / "run"
+    good = AsyncCheckpointer(root, keep=5, async_save=False)
+    good.save(_state(), step=1)
+    bad = AsyncCheckpointer(root, keep=5, async_save=False,
+                            fs=FailingFS(fail_after_bytes=10))
+    with pytest.raises(OSError, match="fault injected"):
+        bad.save(_state(), step=2)
+    # the torn dir exists (partial bytes DID land) but is never returned
+    assert (root / "step_00000002").exists()
+    assert [s for s, _ in find_checkpoints(root)] == [1]
+    restored, step = load_checkpoint(latest_checkpoint(root))
+    assert step == 1
+    _assert_state_equal(restored, _state())
+    # loading the torn dir directly fails fast, never half-loads
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        load_checkpoint(root / "step_00000002")
+
+
+def test_failing_fs_during_manifest_write_leaves_no_commit(tmp_path):
+    """Fault after all shard bytes but inside the manifest write: still
+    torn (phase 2 never renamed), still skipped."""
+    state = _state()
+    data_bytes = checkpoint_plan(state)["total_bytes"]
+    root = tmp_path / "run"
+    bad = AsyncCheckpointer(root, keep=5, async_save=False,
+                            fs=FailingFS(fail_after_bytes=data_bytes + 5))
+    with pytest.raises(OSError):
+        bad.save(state, step=1)
+    d = root / "step_00000001"
+    assert not (d / "manifest.json").exists()
+    assert find_checkpoints(root) == []
+
+
+# ---------------------------------------------------------------------------
+# async finalization
+
+def test_async_save_commits_after_wait_and_roundtrips(tmp_path):
+    state = _state()
+    mgr = AsyncCheckpointer(tmp_path / "run", keep=3)
+    mgr.save(state, step=5)
+    mgr.wait_for_checkpoint()
+    restored, step = load_checkpoint(latest_checkpoint(tmp_path / "run"))
+    assert step == 5
+    _assert_state_equal(restored, state)
+    mgr.close()
+
+
+def test_async_failure_surfaces_at_wait(tmp_path):
+    mgr = AsyncCheckpointer(tmp_path / "run", keep=3,
+                            fs=FailingFS(fail_after_bytes=8))
+    mgr.save(_state(), step=1)
+    with pytest.raises(CheckpointError, match="fault injected"):
+        mgr.wait_for_checkpoint()
+    assert find_checkpoints(tmp_path / "run") == []
+
+
+def test_retention_prunes_oldest_committed(tmp_path):
+    mgr = AsyncCheckpointer(tmp_path / "run", keep=2)
+    for s in range(1, 6):
+        mgr.save(_state(), step=s)
+    mgr.wait_for_checkpoint()
+    assert [s for s, _ in find_checkpoints(tmp_path / "run")] == [4, 5]
+    mgr.close()
+
+
+def test_async_spans_land_on_checkpoint_track(tmp_path):
+    """The background serialize/commit spans ride their own "checkpoint"
+    obs track; the caller thread only pays for the snapshot span."""
+    old = get_recorder()
+    rec = set_recorder(TraceRecorder(enabled=True))
+    try:
+        mgr = AsyncCheckpointer(tmp_path / "run", keep=2)
+        mgr.save(_state(), step=1)
+        mgr.wait_for_checkpoint()
+        mgr.close()
+        names = {e["name"] for e in rec.events() if e.get("ph") == "X"
+                 or e.get("ph") == "B"}
+        assert {"ckpt_snapshot", "ckpt_serialize",
+                "ckpt_commit"} <= names
+        doc = rec.export()
+        tracks = {e["args"]["name"]: e["pid"] * 1e9 + e["tid"]
+                  for e in doc["traceEvents"]
+                  if e.get("ph") == "M" and e["name"] == "thread_name"}
+        assert "checkpoint" in tracks
+    finally:
+        set_recorder(old)
+
+
+# ---------------------------------------------------------------------------
+# byte model (core.memplan.checkpoint_bytes) vs actual disk bytes
+
+def test_checkpoint_plan_matches_disk_exactly(tmp_path):
+    state = _state()
+    plan = checkpoint_plan(state)
+    p = save_checkpoint(str(tmp_path / "ck"), state)
+    disk = sum(f.stat().st_size for f in Path(p).glob("*.bin"))
+    assert plan["total_bytes"] == disk          # raw .bin: EXACT equality
+    assert plan["n_shards"] == sum(1 for _ in Path(p).glob("*.bin"))
+
+
+def test_checkpoint_bytes_model_sharded():
+    """Analytic model: total bytes are layout-independent (each global
+    array is written once); sharding divides the per-host work."""
+    leaves = [((16, 8), "float32", (("data",), ("model",))),   # 4 shards
+              ((8,), "float32", (None,)),                      # replicated
+              ((), "int32", ())]
+    out = checkpoint_bytes(leaves, {"data": 2, "model": 2}, n_hosts=2)
+    assert out["total_bytes"] == 16 * 8 * 4 + 8 * 4 + 4
+    assert out["n_shards"] == 4 + 1 + 1
+    assert out["max_shard_bytes"] == 16 * 8 * 4 // 4
+    assert out["bytes_per_host"] == -(-out["total_bytes"] // 2)
+
+
+def test_save_preserves_bfloat16_bitexact(tmp_path):
+    state = {"w": (jnp.arange(31, dtype=jnp.float32) * 0.37).astype(
+        jnp.bfloat16)}
+    save_checkpoint(str(tmp_path / "ck"), state)
+    restored, _ = load_checkpoint(str(tmp_path / "ck"), state)
+    assert restored["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))

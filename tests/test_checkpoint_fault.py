@@ -1,0 +1,127 @@
+"""Crash / fault-injection harness (ISSUE 7, DESIGN.md §12): a writer
+process is SIGKILLed mid-save — during shard writes and during the
+manifest write, on both the sync and async paths.  In every case the
+previous committed checkpoint restores bit-exactly and the torn one is
+detected and skipped by discovery (never loadable)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+# The writer: commits step 1 with a healthy filesystem, then attempts
+# step 2 through a FailingFS that SIGKILLs the process after N bytes.
+# sys.argv: root, mode (sync|async), fail_after_bytes.
+CHILD = """
+import sys
+from repro.train import AsyncCheckpointer, FailingFS
+
+import test_checkpoint_fault as tf
+
+root, mode, after = sys.argv[1], sys.argv[2], int(sys.argv[3])
+state = tf.reference_state()
+
+ok = AsyncCheckpointer(root, async_save=(mode == "async"))
+ok.save(state, step=1)
+ok.wait_for_checkpoint()
+print("COMMITTED_STEP_1", flush=True)
+
+bad = AsyncCheckpointer(root, async_save=(mode == "async"),
+                        fs=FailingFS(fail_after_bytes=after, kill=True))
+bad.save(tf.reference_state(1), step=2)
+bad.wait_for_checkpoint()
+print("UNREACHABLE", flush=True)   # the SIGKILL must have fired by now
+"""
+
+
+def reference_state(seed: int = 0):
+    rng = np.random.RandomState(seed)
+    return {"w": rng.randn(8, 6).astype(np.float32),
+            "blocks": {"p0": {"scale": rng.randn(12).astype(np.float32)}},
+            "step": np.int32(7 + seed)}
+
+
+def _crash_writer(root, mode, fail_after_bytes):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (SRC + os.pathsep + os.path.dirname(__file__)
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    p = subprocess.run(
+        [sys.executable, "-c", CHILD, str(root), mode,
+         str(fail_after_bytes)],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert "COMMITTED_STEP_1" in p.stdout, (p.stdout, p.stderr)
+    assert "UNREACHABLE" not in p.stdout, "fault injection never fired"
+    assert p.returncode == -9, (p.returncode, p.stderr)   # SIGKILLed
+    return p
+
+
+def _assert_survivor_intact(root):
+    from repro.train import (find_checkpoints, latest_checkpoint,
+                             load_checkpoint, verify_checkpoint)
+    found = find_checkpoints(root)
+    assert [s for s, _ in found] == [1], found     # torn step 2 skipped
+    ck = latest_checkpoint(root)
+    assert ck is not None and ck.name.endswith("00000001")
+    ok, reason = verify_checkpoint(ck)
+    assert ok, reason
+    restored, step = load_checkpoint(ck, like=reference_state())
+    assert step == 1
+    ref = reference_state()
+    np.testing.assert_array_equal(np.asarray(restored["w"]), ref["w"])
+    np.testing.assert_array_equal(
+        np.asarray(restored["blocks"]["p0"]["scale"]),
+        ref["blocks"]["p0"]["scale"])
+    # the torn attempt left a directory but no committed manifest
+    torn = root / "step_00000002"
+    if torn.exists():
+        assert not (torn / "manifest.json").exists()
+        ok, reason = verify_checkpoint(torn)
+        assert not ok and "manifest" in reason
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_sigkill_during_shard_write(tmp_path, mode):
+    """Killed 64 bytes into the first shard: step 1 survives bit-exact,
+    the torn step-2 directory is skipped and unloadable."""
+    _crash_writer(tmp_path, mode, fail_after_bytes=64)
+    _assert_survivor_intact(tmp_path)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_sigkill_during_manifest_write(tmp_path, mode):
+    """Killed after every shard landed, mid-manifest: the .tmp never
+    became manifest.json, so the two-phase commit never happened."""
+    total = sum(np.asarray(x).nbytes
+                for x in [reference_state()["w"],
+                          reference_state()["blocks"]["p0"]["scale"],
+                          reference_state()["step"]])
+    _crash_writer(tmp_path, mode, fail_after_bytes=total + 16)
+    torn = tmp_path / "step_00000002"
+    assert torn.exists()
+    shard_bytes = sum(f.stat().st_size for f in torn.glob("*.bin"))
+    assert shard_bytes == total        # all shards fully written...
+    assert not (torn / "manifest.json").exists()   # ...but no commit
+    _assert_survivor_intact(tmp_path)
+    # dead letter: the partial tmp may exist; discovery must ignore it
+    from repro.train import CheckpointError, load_checkpoint
+    with pytest.raises((CheckpointError, FileNotFoundError)):
+        load_checkpoint(torn)
+
+
+def test_injected_io_error_keeps_previous_restorable(tmp_path):
+    """Non-fatal variant: FailingFS raises instead of killing; the error
+    surfaces to the caller, the previous checkpoint stays valid."""
+    from repro.train import (AsyncCheckpointer, CheckpointError, FailingFS,
+                             find_checkpoints)
+    ck = AsyncCheckpointer(tmp_path, async_save=False)
+    ck.save(reference_state(), step=1)
+    bad = AsyncCheckpointer(tmp_path, async_save=False,
+                            fs=FailingFS(fail_after_bytes=32))
+    with pytest.raises((CheckpointError, OSError)):
+        bad.save(reference_state(1), step=2)
+    assert [s for s, _ in find_checkpoints(tmp_path)] == [1]
+    _assert_survivor_intact(tmp_path)
