@@ -46,12 +46,29 @@ PROMPT_LENS = [32, 48, 64, 96, 128, 192, 256, 384, 512]
 PROMPT_P = [0.30, 0.22, 0.16, 0.12, 0.08, 0.05, 0.04, 0.02, 0.01]
 BUDGETS = [4, 8, 16, 32, 48]
 KERNEL_TOL = 5e-3
+# int8 greedy-parity sub-workload (short-skewed, like the main one but
+# sized so the full fp-vs-int8 token comparison runs in seconds).  The
+# rng seed is part of the benchmark definition: greedy decoding is
+# deterministic, so parity verified once holds run to run.
+INT8_N = 8
+INT8_LENS = [16, 24, 32]
+INT8_BUDGETS = [4, 6, 8]
+INT8_SEED = 2
+INT8_RATIO_FLOOR = 1.8
 
 
 def _workload(vocab: int, seed: int = 2):
     rng = np.random.RandomState(seed)
     lens = rng.choice(PROMPT_LENS, N_REQUESTS, p=PROMPT_P)
     budgets = [int(b) for b in rng.choice(BUDGETS, N_REQUESTS)]
+    prompts = [list(rng.randint(1, vocab, int(L))) for L in lens]
+    return prompts, budgets
+
+
+def _short_workload(vocab: int, seed: int = INT8_SEED):
+    rng = np.random.RandomState(seed)
+    lens = rng.choice(INT8_LENS, INT8_N)
+    budgets = [int(b) for b in rng.choice(INT8_BUDGETS, INT8_N)]
     prompts = [list(rng.randint(1, vocab, int(L))) for L in lens]
     return prompts, budgets
 
@@ -75,7 +92,7 @@ def _kernel_parity():
     return float(jnp.abs(out - want).max())
 
 
-def run(csv: bool = True):
+def run(csv: bool = True, kv_dtype: str = "int8"):
     import jax
     from repro.configs import get_config
     from repro.core.memplan import kv_cache_bytes_dense
@@ -160,6 +177,44 @@ def run(csv: bool = True):
          round(dense / max(pst.peak_cache_bytes, 1), 2),
          "dense / paged peak")
 
+    # -- int8 paged KV-cache (DESIGN.md §13) -------------------------------
+    # same full workload through a quantized-cache engine: block schedule
+    # depends only on lengths/budgets, so fp and int8 peaks count the SAME
+    # blocks — the byte ratio is purely bytes-per-block (codes + scales
+    # vs native rows) and is allocator-deterministic
+    qeng = PagedServeEngine(cfg, params, block_size=BLOCK_SIZE,
+                            max_batch=MAX_BATCH, max_len=max_len,
+                            prefill_chunk=PREFILL_CHUNK, kv_dtype=kv_dtype)
+    q_out, qst = qeng.generate(prompts, max_new_tokens=budgets)
+    emit("serving_int8_decode_tok_per_s",
+         round(qst.tokens_out / qst.decode_s, 1),
+         f"{kv_dtype}; informational: interpret-mode wall, not the TPU "
+         f"story")
+    emit("serving_int8_peak_cache_bytes", qst.peak_cache_bytes,
+         f"{qst.peak_cache_blocks} blocks incl. per-row f32 scales "
+         f"({kv_dtype})")
+    emit("serving_int8_vs_fp_cache_ratio",
+         round(pst.peak_cache_bytes / max(qst.peak_cache_bytes, 1), 2),
+         f"fp paged peak / int8 paged peak (floor {INT8_RATIO_FLOOR})")
+
+    # greedy-token parity fp vs int8 on the short-skewed sub-workload:
+    # 1-byte codes perturb logits by ~1e-2, so near-tie argmaxes can flip
+    # on long decodes; short generations with healthy top-1 margins must
+    # agree EXACTLY, and greedy determinism makes this stable run to run
+    sp, sb = _short_workload(cfg.vocab)
+    s_len = max(INT8_LENS) + max(INT8_BUDGETS) + 8
+    parity_out = {}
+    for kd in (None, kv_dtype):
+        e = PagedServeEngine(cfg, params, block_size=BLOCK_SIZE,
+                             max_batch=MAX_BATCH, max_len=s_len,
+                             prefill_chunk=32, kv_dtype=kd)
+        parity_out[kd], _ = e.generate(sp, max_new_tokens=sb, warmup=False)
+    q_mism = sum(int(a != b)
+                 for ta, tb in zip(parity_out[None], parity_out[kv_dtype])
+                 for a, b in zip(ta, tb))
+    emit("serving_int8_token_mismatches", q_mism,
+         f"{sum(sb)} greedy tokens, {INT8_N} short-skewed requests")
+
     # -- kernel ------------------------------------------------------------
     emit("serving_paged_kernel_max_err", _kernel_parity(),
          "pallas interpret vs oracle, GQA + block boundary")
@@ -183,6 +238,14 @@ def validate(rows) -> list[str]:
     ratio = d.get("serving_cache_ratio", 0)
     if ratio < 4.0:
         failures.append(f"dense/paged peak cache ratio {ratio} < 4.0")
+    qratio = d.get("serving_int8_vs_fp_cache_ratio", 0)
+    if qratio < INT8_RATIO_FLOOR:
+        failures.append(f"int8 cache ratio {qratio} < {INT8_RATIO_FLOOR}")
+    if d.get("serving_int8_token_mismatches", 1) != 0:
+        failures.append(
+            f"int8 engine disagrees with fp greedy tokens on "
+            f"{d.get('serving_int8_token_mismatches')} draws "
+            f"(short-skewed parity workload)")
     err = d.get("serving_paged_kernel_max_err", 1.0)
     if err > KERNEL_TOL:
         failures.append(f"paged kernel max err {err} > {KERNEL_TOL}")
@@ -190,7 +253,13 @@ def validate(rows) -> list[str]:
 
 
 if __name__ == "__main__":
-    rows = run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-dtype", default="int8",
+                    choices=["int8", "fp8_e4m3", "fp8_e5m2"],
+                    help="storage dtype for the quantized-cache section "
+                         "(the gates are calibrated for int8)")
+    rows = run(kv_dtype=ap.parse_args().kv_dtype)
     bad = validate(rows)
     print("PASS" if not bad else bad)
     sys.exit(1 if bad else 0)

@@ -215,16 +215,33 @@ def plan_graph(graph: Graph, shapes: dict, dtypes: dict,
 # lifetime has actually started (positions < the sequence's live length).
 
 
-def _cache_row_bytes(cfg) -> tuple[int, int]:
+def _kv_tok_bytes(cfg, kv_dtype=None) -> int:
+    """Bytes per cached (token, kv-head) K or V row for ONE layer's head.
+
+    Native caches store ``hd`` activations at the model itemsize.  A
+    quantized cache (``kv_dtype`` = "int8" / "fp8_e4m3" / "fp8_e5m2")
+    stores ``hd`` one-byte codes PLUS one f32 scale per (token, kv-head)
+    row — the per-block scale tensors allocated alongside the pools by
+    ``make_paged_cache`` (DESIGN.md §13)."""
+    act = 2 if cfg.dtype == "bfloat16" else 4
+    if kv_dtype in (None, "native"):
+        return cfg.hd * act
+    from repro.kernels.quant import resolve_kv_dtype
+    qdt = resolve_kv_dtype(kv_dtype)    # validates the name
+    return cfg.hd * _DTYPE_BYTES[str(qdt)] + 4
+
+
+def _cache_row_bytes(cfg, kv_dtype=None) -> tuple[int, int]:
     """(bytes per cached token across all attn layers, fixed per-seq SSM
     state bytes).  ``cfg`` is an ``ArchConfig`` duck-type: only pattern /
     n_super / head dims / ssm dims / dtype are read."""
     act = 2 if cfg.dtype == "bfloat16" else 4
+    tok = _kv_tok_bytes(cfg, kv_dtype)
     per_tok = 0
     fixed = 0
     for spec in cfg.pattern:
         if spec.kind == "attn":
-            per_tok += cfg.n_super * 2 * cfg.n_kv_heads * cfg.hd * act
+            per_tok += cfg.n_super * 2 * cfg.n_kv_heads * tok
         else:
             ch = cfg.d_inner + 2 * cfg.ssm_state
             fixed += cfg.n_super * ((cfg.conv_width - 1) * ch * act
@@ -233,15 +250,17 @@ def _cache_row_bytes(cfg) -> tuple[int, int]:
     return per_tok, fixed
 
 
-def kv_cache_bytes_dense(cfg, batch: int, max_len: int) -> int:
+def kv_cache_bytes_dense(cfg, batch: int, max_len: int,
+                         kv_dtype=None) -> int:
     """Dense engine footprint: every sequence padded to ``max_len``
     (windowed layers ring-buffered to ``min(window, max_len)``)."""
     act = 2 if cfg.dtype == "bfloat16" else 4
+    tok = _kv_tok_bytes(cfg, kv_dtype)
     total = 0
     for spec in cfg.pattern:
         if spec.kind == "attn":
             S = max_len if spec.window is None else min(spec.window, max_len)
-            total += cfg.n_super * batch * S * 2 * cfg.n_kv_heads * cfg.hd * act
+            total += cfg.n_super * batch * S * 2 * cfg.n_kv_heads * tok
         else:
             ch = cfg.d_inner + 2 * cfg.ssm_state
             total += cfg.n_super * batch * (
@@ -250,13 +269,16 @@ def kv_cache_bytes_dense(cfg, batch: int, max_len: int) -> int:
     return total
 
 
-def kv_cache_bytes_paged(cfg, lengths, block_size: int) -> dict:
+def kv_cache_bytes_paged(cfg, lengths, block_size: int,
+                         kv_dtype=None) -> dict:
     """Paged footprint for live per-sequence ``lengths`` (an iterable of
     token counts): blocks actually backed, block-granularity rounding
     included, plus the per-slot SSM state.  Returns ``{"bytes", "blocks",
     "block_bytes"}`` — ``block_bytes`` is the size of ONE block across all
-    attention layers (the unit the allocator's ``peak_in_use`` counts)."""
-    per_tok, fixed = _cache_row_bytes(cfg)
+    attention layers (the unit the allocator's ``peak_in_use`` counts).
+    With ``kv_dtype`` set, the per-row f32 scale tensors are included so
+    the model equals the real pool allocation exactly."""
+    per_tok, fixed = _cache_row_bytes(cfg, kv_dtype)
     lengths = [int(L) for L in lengths]
     block_bytes = per_tok * block_size
     blocks = sum(-(-L // block_size) for L in lengths if L > 0)

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer (TPU-targeted, interpret-mode on CPU).
+#
+# Impl modules (flash_attention, paged_attention, rmsnorm, fused_update,
+# sampling) pair with ``ref.py`` oracles.  ``registry.py`` names every op's
+# impl, reference, and tunable-parameter space; ``autotune.py`` sweeps the
+# space per (op, shape-bucket, dtype, backend) and persists winners;
+# ``ops.py`` is the public entry — call sites get tuned schedules with no
+# signature changes (DESIGN.md §13).  ``quant.py`` holds the int8/fp8
+# KV-cache quantization helpers.

@@ -1,0 +1,243 @@
+"""Shape-keyed autotuner for the registered Pallas kernels (DESIGN.md §13).
+
+``tune`` sweeps an op's tunable space (``registry.OpSpec.candidates``,
+defaults always included) with timed compiled runs on the caller's real
+arrays, and persists the winner under the key
+``op|backend|shape-bucket`` in a JSON cache.  ``kernels/ops.py`` consults
+the cache on every call (``registry.resolve``), so call sites get tuned
+parameters with no signature change — tuning is an explicit offline step
+(this module's CLI, or ``bench_kernels.py``'s sweep), never implicit at
+inference time.
+
+Cache location: ``~/.cache/repro/autotune.json``, overridable with the
+``REPRO_AUTOTUNE_CACHE`` environment variable.  A corrupt or unreadable
+cache file degrades to the defaults with a warning — it never crashes a
+serving process.
+
+CLI::
+
+    python -m repro.kernels.autotune --op paged_attention   # one op
+    python -m repro.kernels.autotune --all                  # every op
+    python -m repro.kernels.autotune --all --cache /tmp/at.json --json
+
+>>> import tempfile, os
+>>> path = os.path.join(tempfile.mkdtemp(), "autotune.json")
+>>> c = AutotuneCache(path)
+>>> key = cache_key("rmsnorm", "rows=512,d=256,f32", backend="cpu")
+>>> c.put(key, {"block_rows": 1024}, tuned_us=10.0, default_us=30.0)
+>>> c.save()
+>>> AutotuneCache(path).get(key)
+{'block_rows': 1024}
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+
+import jax
+
+from . import registry
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+DEFAULT_CACHE = "~/.cache/repro/autotune.json"
+_SCHEMA = 1
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get(CACHE_ENV) or DEFAULT_CACHE).expanduser()
+
+
+def cache_key(op: str, bucket: str, backend: str | None = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{op}|{backend}|{bucket}"
+
+
+class AutotuneCache:
+    """The persisted winner table: ``key -> {params, tuned_us, ...}``."""
+
+    def __init__(self, path: str | Path | None = None):
+        self.path = Path(path) if path is not None else cache_path()
+        self.entries: dict[str, dict] = {}
+        self._load()
+
+    def _load(self):
+        if not self.path.exists():
+            return
+        try:
+            data = json.loads(self.path.read_text())
+            if (not isinstance(data, dict)
+                    or not isinstance(data.get("entries"), dict)):
+                raise ValueError("missing 'entries' table")
+            self.entries = data["entries"]
+        except (ValueError, OSError) as e:
+            warnings.warn(
+                f"autotune cache {self.path} is unreadable ({e}); "
+                f"falling back to default kernel parameters", stacklevel=2)
+            self.entries = {}
+
+    def get(self, key: str) -> dict | None:
+        e = self.entries.get(key)
+        return dict(e["params"]) if e else None
+
+    def put(self, key: str, params: dict, *, tuned_us: float,
+            default_us: float):
+        self.entries[key] = {
+            "params": dict(params),
+            "tuned_us": round(float(tuned_us), 3),
+            "default_us": round(float(default_us), 3)}
+
+    def save(self):
+        """Atomic write (tmp + rename) so a crashed tuner never leaves a
+        truncated cache behind."""
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(
+            {"schema": _SCHEMA, "entries": self.entries}, indent=1,
+            sort_keys=True))
+        os.replace(tmp, self.path)
+
+
+# process-wide singleton consulted by registry.resolve on every op call;
+# loaded lazily once (re-reading JSON per decode step would be absurd)
+_CACHE: AutotuneCache | None = None
+
+
+def get_cache() -> AutotuneCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = AutotuneCache()
+    return _CACHE
+
+
+def reset_cache():
+    """Drop the singleton (tests flip ``REPRO_AUTOTUNE_CACHE``)."""
+    global _CACHE
+    _CACHE = None
+
+
+def cached_params(op: str, bucket: str) -> dict | None:
+    return get_cache().get(cache_key(op, bucket))
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+
+
+def _time_us(fn, args, *, repeats: int, warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def tune(op: str, args, kwargs=None, *, cache: AutotuneCache | None = None,
+         repeats: int = 3, warmup: int = 1, save: bool = True) -> dict:
+    """Sweep ``op``'s tunable space on one concrete workload.
+
+    ``args``/``kwargs`` are the op's real call arguments (tunables
+    excluded).  Every candidate is jit-compiled and timed; the winner is
+    stored under the workload's shape bucket.  Returns a report dict
+    (params / tuned_us / default_us / speedup / bucket / key / sweep).
+    Since the defaults are always in the candidate set, ``speedup`` is
+    >= 1.0 by construction.
+    """
+    kwargs = dict(kwargs or {})
+    spec = registry.get(op)
+    bucket = spec.bucket_of(*args, **kwargs)
+    key = cache_key(op, bucket)
+    sweep = []
+    best = None
+    default_us = None
+    for cand in spec.candidates():
+        fn = jax.jit(functools.partial(spec.impl, **kwargs, **cand))
+        try:
+            us = _time_us(fn, args, repeats=repeats, warmup=warmup)
+        except Exception as e:  # noqa: BLE001 — candidate may be invalid
+            sweep.append({**cand, "us": None, "error": f"{type(e).__name__}"})
+            continue
+        sweep.append({**cand, "us": round(us, 3)})
+        if default_us is None:          # candidates() yields defaults first
+            default_us = us
+        if best is None or us < best[1]:
+            best = (cand, us)
+    if best is None:
+        raise RuntimeError(f"every candidate failed for {op} ({bucket})")
+    params, tuned_us = best
+    cache = cache or get_cache()
+    cache.put(key, params, tuned_us=tuned_us, default_us=default_us)
+    if save:
+        cache.save()
+    return {"op": op, "bucket": bucket, "key": key, "params": params,
+            "tuned_us": tuned_us, "default_us": default_us,
+            "speedup": default_us / tuned_us, "sweep": sweep}
+
+
+def tune_op_bench_cases(op: str, **kw) -> list[dict]:
+    """Tune every canned bench case of one op (the CLI unit of work)."""
+    spec = registry.get(op)
+    out = []
+    for label, make in spec.bench_cases:
+        args, kwargs = make()
+        rep = tune(op, args, kwargs, **kw)
+        rep["case"] = label
+        out.append(rep)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Sweep kernel tunables and persist winners "
+                    "(see DESIGN.md §13)")
+    ap.add_argument("--op", action="append", default=[],
+                    help="op to tune (repeatable); see --list")
+    ap.add_argument("--all", action="store_true", help="tune every op")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered ops and exit")
+    ap.add_argument("--cache", default=None,
+                    help=f"cache file (default: ${CACHE_ENV} or "
+                         f"{DEFAULT_CACHE})")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON instead of a table")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in registry.ops():
+            spec = registry.get(name)
+            print(f"{name}: tunables={dict(spec.tunables)} "
+                  f"defaults={spec.defaults}")
+        return 0
+
+    names = registry.ops() if args.all else args.op
+    if not names:
+        ap.error("pass --op NAME (repeatable), --all, or --list")
+    cache = AutotuneCache(args.cache) if args.cache else get_cache()
+
+    reports = []
+    for name in names:
+        reports.extend(tune_op_bench_cases(name, cache=cache,
+                                           repeats=args.repeats))
+    if args.json:
+        print(json.dumps(reports, indent=1))
+    else:
+        print(f"# autotune -> {cache.path}")
+        print("op,case,bucket,winner,tuned_us,default_us,speedup")
+        for r in reports:
+            win = " ".join(f"{k}={v}" for k, v in sorted(r["params"].items()))
+            print(f"{r['op']},{r['case']},{r['bucket']},{win},"
+                  f"{r['tuned_us']:.1f},{r['default_us']:.1f},"
+                  f"{r['speedup']:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

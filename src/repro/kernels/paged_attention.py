@@ -10,13 +10,25 @@ ever sees dense (block_size, head_dim) tiles.
 
 Design notes (TPU-native, mirrors ``flash_attention.py``):
 
-* grid = (B, K, n_pages); n_pages is "arbitrary" (sequential) so the
-  online-softmax carry (m, l, acc) lives in VMEM scratch across pages;
+* grid = (B, K/head_tile, n_pages/pages_per_step); the page axis is
+  "arbitrary" (sequential) so the online-softmax carry (m, l, acc) lives
+  in VMEM scratch across pages;
 * scalar prefetch: ``block_tables (B, n_pages)`` and ``lengths (B,)``
   ride ahead of the grid so index_maps can compute DMA source blocks
   (``pltpu.PrefetchScalarGridSpec``);
-* GQA: the kernel processes one KV head per grid step with all its G
-  query heads as the q tile (G, hd) — no repeated-KV materialization;
+* GQA: each grid step processes ``head_tile`` KV heads with all their G
+  query heads as the q tile (ht, G, hd) — no repeated-KV
+  materialization;
+* tunables (registry op ``paged_attention``): ``pages_per_step`` fetches
+  several table entries per grid step (each page is its own BlockSpec
+  input, so the DMA engine issues the gathers in parallel and the MXU
+  sees one (ht, pps*bs, hd) tile); ``head_tile`` batches KV heads per
+  step.  Both shrink grid-overhead-bound decode steps;
+* quantized pools (DESIGN.md §13): when ``k_scale``/``v_scale``
+  (num_blocks, block_size, K) f32 ride along, k/v tiles are stored
+  int8/fp8 and dequantized *inside the score block* right after the DMA
+  lands (``tile.astype(f32) * scale``) — no fp16 copy of the cache ever
+  materializes;
 * pages past a sequence's live length are skipped (``pl.when``), so a
   short sequence in a long-table batch costs only its own pages of MXU
   work (the DMA for the skipped block still lands — sink pages make it
@@ -45,10 +57,18 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 NEG_INF = -1e30
 
 
-def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale, block_size, n_pages,
-                  window, softcap):
-    """One (b, kv_head, page) grid step."""
+def _paged_kernel(tables_ref, lens_ref, q_ref, *refs, scale, block_size,
+                  n_steps, pps, quant, window, softcap):
+    """One (b, kv-head-tile, page-group) grid step."""
+    k_refs = refs[:pps]
+    v_refs = refs[pps:2 * pps]
+    if quant:
+        ks_refs = refs[2 * pps:3 * pps]
+        vs_refs = refs[3 * pps:4 * pps]
+        o_ref, m_scr, l_scr, acc_scr = refs[4 * pps:]
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs[2 * pps:]
+
     b = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -60,47 +80,60 @@ def _paged_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
 
     length = lens_ref[b]                       # live tokens incl. current
 
-    @pl.when(pi * block_size < length)
-    def _compute():
-        q = q_ref[0, 0, :, :].astype(jnp.float32)        # (G, hd)
-        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, hd)
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+    def tile(j, kv_ref, s_ref):
+        """(1, bs, ht, hd) page -> dequantized f32 (ht, bs, hd)."""
+        t = jnp.swapaxes(kv_ref[0], 0, 1).astype(jnp.float32)
+        if quant:
+            t = t * jnp.swapaxes(s_ref[0], 0, 1).astype(jnp.float32)[..., None]
+        return t
 
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+    @pl.when(pi * pps * block_size < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (ht, G, hd)
+        k = jnp.concatenate(
+            [tile(j, k_refs[j], ks_refs[j] if quant else None)
+             for j in range(pps)], axis=1)               # (ht, pps*bs, hd)
+        v = jnp.concatenate(
+            [tile(j, v_refs[j], vs_refs[j] if quant else None)
+             for j in range(pps)], axis=1)
+
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
                                 preferred_element_type=jnp.float32) * scale
-        if softcap is not None:
+        if softcap is not None:                          # (ht, G, pps*bs)
             s = jnp.tanh(s / softcap) * softcap
 
-        kpos = (pi * block_size
-                + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1))
+        kpos = (pi * pps * block_size
+                + jax.lax.broadcasted_iota(jnp.int32, (1, 1, pps * block_size),
+                                           2))
         mask = kpos < length
         if window is not None:
             # the single query row sits at absolute position length-1
             mask &= kpos > (length - 1) - window
         s = jnp.where(mask, s, NEG_INF)
 
-        m_prev = m_scr[...]                               # (G, 1)
+        m_prev = m_scr[...]                              # (ht, G, 1)
         l_prev = l_scr[...]
-        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_cur = jnp.max(s, axis=2, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new)
         p = jnp.where(mask, p, 0.0)         # fully-masked block: exp(0)=1
         corr = jnp.exp(m_prev - m_new)
-        l_scr[...] = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        l_scr[...] = corr * l_prev + jnp.sum(p, axis=2, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
+            p, v, (((2,), (1,)), ((0,), (0,))),
             preferred_element_type=jnp.float32)
         m_scr[...] = m_new
 
-    @pl.when(pi == n_pages - 1)
+    @pl.when(pi == n_steps - 1)
     def _done():
         l = l_scr[...]
         l = jnp.where(l == 0.0, 1.0, l)                  # inactive lanes
-        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    window=None, softcap=None, interpret=None):
+                    k_scale=None, v_scale=None, window=None, softcap=None,
+                    pages_per_step=1, head_tile=1, interpret=None):
     """Single-token attention through a paged KV pool.
 
     q: (B, H, hd) — the current token's query rows;
@@ -108,37 +141,72 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     block_tables: (B, n_pages) int32, logical page -> physical block
     (sink-filled past each sequence's pages);
     lengths: (B,) int32 — live tokens per sequence INCLUDING the current
-    one (the row at position lengths-1 must already be written).
+    one (the row at position lengths-1 must already be written);
+    k_scale/v_scale: (num_blocks, block_size, K) f32 per-row scales when
+    the pools are quantized (both or neither);
+    pages_per_step / head_tile: grid tunables (see module docstring) —
+    pure schedule knobs, the output is bitwise independent of them up to
+    f32 summation order.
 
     Returns (B, H, hd).  Lanes with length 0 return zeros.
     """
     B, H, hd = q.shape
     NB, bs, K, _ = k_pages.shape
     assert H % K == 0, (H, K)
+    assert (k_scale is None) == (v_scale is None)
+    quant = k_scale is not None
     G = H // K
     n_pages = block_tables.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    ht = int(head_tile) if head_tile and K % int(head_tile) == 0 else 1
+    pps = max(1, min(int(pages_per_step), n_pages))
+    pad = (-n_pages) % pps
+    tables = block_tables.astype(jnp.int32)
+    if pad:
+        # pad the table to a pps multiple with sink pages (block 0); the
+        # pad pages sit past every live length, so they are masked out
+        tables = jnp.pad(tables, [(0, 0), (0, pad)])
+    n_steps = (n_pages + pad) // pps
+
     qg = q.reshape(B, K, G, hd)
     kernel = functools.partial(
         _paged_kernel, scale=1.0 / math.sqrt(hd), block_size=bs,
-        n_pages=n_pages, window=window, softcap=softcap)
+        n_steps=n_steps, pps=pps, quant=quant, window=window,
+        softcap=softcap)
 
-    q_spec = pl.BlockSpec((1, 1, G, hd), lambda b, kh, pi, *_: (b, kh, 0, 0))
-    kv_spec = pl.BlockSpec(
-        (1, bs, 1, hd),
-        lambda b, kh, pi, tables, lens: (tables[b, pi], 0, kh, 0))
+    q_spec = pl.BlockSpec((1, ht, G, hd), lambda b, kh, pi, *_: (b, kh, 0, 0))
+
+    def kv_spec(j):
+        return pl.BlockSpec(
+            (1, bs, ht, hd),
+            lambda b, kh, pi, tables, lens: (tables[b, pi * pps + j], 0,
+                                             kh, 0))
+
+    def scale_spec(j):
+        return pl.BlockSpec(
+            (1, bs, ht),
+            lambda b, kh, pi, tables, lens: (tables[b, pi * pps + j], 0, kh))
+
+    in_specs = ([q_spec]
+                + [kv_spec(j) for j in range(pps)]
+                + [kv_spec(j) for j in range(pps)])
+    inputs = [qg] + [k_pages] * pps + [v_pages] * pps
+    if quant:
+        in_specs += ([scale_spec(j) for j in range(pps)]
+                     + [scale_spec(j) for j in range(pps)])
+        inputs += [k_scale] * pps + [v_scale] * pps
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, K, n_pages),
-        in_specs=[q_spec, kv_spec, kv_spec],
+        grid=(B, K // ht, n_steps),
+        in_specs=in_specs,
         out_specs=q_spec,
         scratch_shapes=[
-            pltpu.VMEM((G, 1), jnp.float32),     # running max m
-            pltpu.VMEM((G, 1), jnp.float32),     # running sum l
-            pltpu.VMEM((G, hd), jnp.float32),    # output accumulator
+            pltpu.VMEM((ht, G, 1), jnp.float32),     # running max m
+            pltpu.VMEM((ht, G, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((ht, G, hd), jnp.float32),    # output accumulator
         ],
     )
     out = pl.pallas_call(
@@ -148,6 +216,5 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      qg, k_pages, v_pages)
+    )(tables, lengths.astype(jnp.int32), *inputs)
     return out.reshape(B, H, hd)

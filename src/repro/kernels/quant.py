@@ -1,0 +1,82 @@
+"""Quantized KV-cache helpers (int8 / fp8 paged pools, DESIGN.md §13).
+
+The paged pool stores each cached token row quantized per (token, kv-head)
+with a single f32 scale: ``row_q = clip(round(row / scale))`` where
+``scale = max|row| / QMAX``.  Scales live in pool-shaped side tensors
+``(num_blocks, block_size, K)`` so the paged kernel's block-table
+indirection fetches the scale tile with the same index map as the KV tile
+and dequantizes inside the score block — a full-precision copy of the
+cache never materializes.
+
+Symmetric scaling (no zero-point): attention K/V rows are zero-centered
+post-RoPE, and a zero-point would add an MXU-unfriendly integer bias term
+to the score matmul.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# canonical CLI/engine names -> jnp storage dtype.  "native" / None keep
+# the activation dtype (no quantization, no scale tensors).
+KV_DTYPES = {
+    "int8": jnp.int8,
+    "fp8": jnp.float8_e4m3fn,           # alias for the e4m3 default
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+}
+
+# largest finite magnitude representable per storage dtype
+_QMAX = {
+    jnp.dtype(jnp.int8): 127.0,
+    jnp.dtype(jnp.float8_e4m3fn): 448.0,
+    jnp.dtype(jnp.float8_e5m2): 57344.0,
+}
+
+
+def resolve_kv_dtype(name):
+    """CLI name -> jnp dtype, or None for the native (unquantized) path.
+
+    Accepts None, "native", a name from ``KV_DTYPES``, or a jnp dtype
+    already in the table.
+    """
+    if name is None or name == "native":
+        return None
+    if not isinstance(name, str):
+        if jnp.dtype(name) in _QMAX:
+            return jnp.dtype(name)
+        raise ValueError(f"unsupported kv dtype {name!r}")
+    try:
+        return jnp.dtype(KV_DTYPES[name])
+    except KeyError:
+        raise ValueError(
+            f"unknown --kv-dtype {name!r}; choose from "
+            f"{['native', *sorted(KV_DTYPES)]}") from None
+
+
+def kv_qmax(dtype) -> float:
+    return _QMAX[jnp.dtype(dtype)]
+
+
+def kv_quantize_rows(x, dtype):
+    """Quantize rows over the last axis: ``x (..., hd)`` -> ``(q, scale)``
+    with ``q (..., hd)`` in ``dtype`` and ``scale (...,)`` f32.
+
+    ``scale = max|row| / QMAX`` (0 for all-zero rows, which dequantize
+    back to exact zeros — freshly zeroed pool blocks stay zero).
+    """
+    dtype = jnp.dtype(dtype)
+    qmax = kv_qmax(dtype)
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = amax / qmax
+    y = x32 / jnp.where(scale == 0.0, 1.0, scale)[..., None]
+    if dtype == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.rint(y), -qmax, qmax).astype(dtype)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(dtype)
+    return q, scale
+
+
+def kv_dequantize(q, scale):
+    """Inverse of ``kv_quantize_rows``: ``(..., hd)`` x ``(...,)`` -> f32."""
+    return q.astype(jnp.float32) * scale[..., None]

@@ -32,12 +32,17 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
-                        window=None, softcap=None):
+                        k_scale=None, v_scale=None, window=None,
+                        softcap=None):
     """q: (B, H, hd); pools: (NB, bs, K, hd); block_tables: (B, P) int32;
     lengths: (B,) live tokens incl. the current one.  Gathers the logical
     KV through the table, then masked dense attention in f32.  This is
     also the CPU fast path the serving engine uses (interpret-mode Pallas
-    is per-grid-step Python)."""
+    is per-grid-step Python).
+
+    ``k_scale``/``v_scale``: (NB, bs, K) f32 per-(token, kv-head) scales
+    for quantized pools (DESIGN.md §13) — rows dequantize as
+    ``row.astype(f32) * scale`` before attention."""
     B, H, hd = q.shape
     NB, bs, K, _ = k_pages.shape
     G = H // K
@@ -45,6 +50,10 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     # (B, P, bs, K, hd) -> (B, P*bs, K, hd): logical position order
     k = k_pages[block_tables].reshape(B, P * bs, K, hd)
     v = v_pages[block_tables].reshape(B, P * bs, K, hd)
+    if k_scale is not None:
+        from .quant import kv_dequantize
+        k = kv_dequantize(k, k_scale[block_tables].reshape(B, P * bs, K))
+        v = kv_dequantize(v, v_scale[block_tables].reshape(B, P * bs, K))
     qg = q.reshape(B, K, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) / np.sqrt(hd)
@@ -68,6 +77,36 @@ def rmsnorm_ref(x, weight, eps=1e-6):
     x32 = x.astype(jnp.float32)
     y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
     return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def sample_ref(logits, u, *, temperature=1.0, top_k=None, top_p=None):
+    """Oracle for ``kernels.sampling.sample_tokens``: top-k / top-p /
+    inverse-CDF sampling in dense jnp with the kernel's exact tie rules.
+
+    logits: (B, V); u: (B,) uniforms in [0, 1).  Returns (B,) int32.
+    Top-p uses the per-token strict-mass predicate (keep x iff the mass
+    strictly above x is < top_p * Z) via an O(V^2) pairwise sum — tie
+    classes are kept or dropped whole, unlike the usual sorted-cumsum
+    formulation that splits them arbitrarily.  Fine for oracle-sized V.
+    """
+    B, V = logits.shape
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / temperature
+    keep = jnp.ones_like(x, bool)
+    if top_k is not None and 0 < top_k < V:
+        kth = jax.lax.top_k(x, top_k)[0][:, -1:]
+        keep &= x >= kth
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.where(keep, jnp.exp(x - m), 0.0)
+    if top_p is not None and top_p < 1.0:
+        budget = top_p * jnp.sum(p, axis=-1, keepdims=True)
+        strictly_above = x[:, None, :] > x[:, :, None]        # (B, V, V)
+        mass_above = jnp.sum(strictly_above * p[:, None, :], axis=-1)
+        p = jnp.where(mass_above < budget, p, 0.0)
+    c = jnp.cumsum(p, axis=-1)
+    target = u.astype(jnp.float32)[:, None] * c[:, -1:]
+    return jnp.argmax(c > target, axis=-1).astype(jnp.int32)
 
 
 def sgd_momentum_ref(param, grad, mom, *, lr, mu, weight_decay):

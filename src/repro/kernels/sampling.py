@@ -1,0 +1,140 @@
+"""Fused top-k / top-p token sampling as a Pallas kernel.
+
+Per decode step the serve engines need one token per lane from the
+``(B, V)`` logits.  The host path is a sort (top-k), a cumsum (top-p) and
+a categorical draw — three full-vocab passes with HBM round-trips between
+them.  This kernel fuses filter + softmax + inverse-CDF draw into one
+VMEM-resident pass per row tile; the only inputs besides logits are B
+uniform floats (drawn with ``jax.random`` outside — the kernel itself is
+RNG-free and deterministic).
+
+Sorting is not available on the VPU, so both cutoffs are found by a
+32-step binary search over the *bit space* of the score values: an IEEE
+f32 compares like its sign-adjusted uint32 image, so "the k-th largest
+score" and "the smallest score whose strictly-greater probability mass is
+< top_p * Z" are both exact lattice points reachable by monotone
+predicate bisection (no float epsilon anywhere — ties share one key and
+are kept or dropped together, matching ``ref.sample_ref``).
+
+Semantics (shared with the oracle):
+
+* temperature == 0: plain argmax (first index on ties);
+* top-k keeps every score >= the k-th largest (ties widen the set);
+* top-p keeps score x iff the probability mass STRICTLY ABOVE x is
+  < top_p * Z, computed over the top-k-filtered distribution;
+* the draw inverts the CDF in vocab-index order: the sampled index is
+  the first i with cumsum(p)[i] > u * total_mass.
+
+Tunable: ``rows_per_step`` — logits rows per grid step (registry op
+``sample_tokens``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 spells it TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _order_keys(x):
+    """f32 -> uint32 image with the same total order (sign-flip trick)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    sign = (bits >> jnp.uint32(31)).astype(bool)
+    return jnp.where(sign, ~bits, bits | jnp.uint32(0x80000000))
+
+
+def _kth_largest_key(keys, k):
+    """Exact k-th largest uint32 key per row (keys: (R, V) -> (R, 1)).
+
+    Greedy MSB-first bisection for the largest lattice value t with
+    ``count(keys >= t) >= k``; since every key is a lattice point, t IS
+    the k-th largest key.
+    """
+    t = jnp.zeros((keys.shape[0], 1), jnp.uint32)
+    for b in range(31, -1, -1):
+        cand = t | jnp.uint32(2 ** b)
+        cnt = jnp.sum((keys >= cand).astype(jnp.int32), axis=1,
+                      keepdims=True)
+        t = jnp.where(cnt >= k, cand, t)
+    return t
+
+
+def _nucleus_keep(keys, p, budget):
+    """Top-p keep mask: keep key x iff ``sum(p[keys > x]) < budget``.
+
+    Bisection for the largest lattice t with mass-strictly-above >=
+    budget; the kept set is then ``keys > t`` (or everything, when even
+    the full strictly-above-minimum mass is under budget).
+    """
+    R = keys.shape[0]
+
+    def strict_mass(t):
+        return jnp.sum(jnp.where(keys > t, p, 0.0), axis=1, keepdims=True)
+
+    t = jnp.zeros((R, 1), jnp.uint32)
+    for b in range(31, -1, -1):
+        cand = t | jnp.uint32(2 ** b)
+        t = jnp.where(strict_mass(cand) >= budget, cand, t)
+    all_kept = strict_mass(jnp.zeros((R, 1), jnp.uint32)) < budget
+    return jnp.where(all_kept, True, keys > t)
+
+
+def _sampling_kernel(logits_ref, u_ref, o_ref, *, temperature, top_k,
+                     top_p, vocab):
+    l = logits_ref[...].astype(jnp.float32)            # (R, V)
+    if temperature == 0.0:
+        o_ref[...] = jnp.argmax(l, axis=1, keepdims=True).astype(jnp.int32)
+        return
+    x = l / temperature
+    keys = _order_keys(x)
+    keep = jnp.ones_like(x, bool)
+    if top_k is not None and 0 < top_k < vocab:
+        keep &= keys >= _kth_largest_key(keys, top_k)
+    m = jnp.max(x, axis=1, keepdims=True)              # argmax always kept
+    p = jnp.where(keep, jnp.exp(x - m), 0.0)
+    if top_p is not None and top_p < 1.0:
+        budget = top_p * jnp.sum(p, axis=1, keepdims=True)
+        p = jnp.where(_nucleus_keep(keys, p, budget), p, 0.0)
+    c = jnp.cumsum(p, axis=1)
+    target = u_ref[...] * c[:, -1:]                    # u in [0,1) -> < total
+    o_ref[...] = jnp.argmax(c > target, axis=1,
+                            keepdims=True).astype(jnp.int32)
+
+
+def sample_tokens(logits, u, *, temperature=1.0, top_k=None, top_p=None,
+                  rows_per_step=4, interpret=None):
+    """Sample one token per row.  logits: (B, V); u: (B,) uniforms in
+    [0, 1).  Returns (B,) int32.  ``temperature == 0`` is greedy argmax
+    (u is ignored); ``top_k=None``/``top_p=None`` disable the cutoffs.
+    """
+    B, V = logits.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rb = max(1, min(int(rows_per_step), B))
+    pad = (-B) % rb
+    if pad:
+        logits = jnp.pad(logits, [(0, pad), (0, 0)])
+        u = jnp.pad(u, [(0, pad)])
+    n_tiles = (B + pad) // rb
+
+    kernel = functools.partial(
+        _sampling_kernel, temperature=float(temperature),
+        top_k=None if top_k is None else int(top_k),
+        top_p=None if top_p is None else float(top_p), vocab=V)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((rb, V), lambda i: (i, 0)),
+                  pl.BlockSpec((rb, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B + pad, 1), jnp.int32),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(logits, u.astype(jnp.float32)[:, None])
+    return out[:B, 0]

@@ -250,12 +250,16 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool,
         dense = kv_cache_bytes_dense(cfg, B, S)
         full = kv_cache_bytes_paged(cfg, [S] * B, bs)
         half = kv_cache_bytes_paged(cfg, [S // 2] * B, bs)
+        # quantized pools (int8 codes + per-row f32 scales, DESIGN.md §13)
+        full_q = kv_cache_bytes_paged(cfg, [S] * B, bs, kv_dtype="int8")
         rec["cache_footprint"] = {
             "block_size": bs,
             "dense_bytes": dense,
             "paged_bytes_full": full["bytes"],
             "paged_bytes_mixed_mean": half["bytes"],
             "padded_over_true_mixed": round(dense / max(half["bytes"], 1), 2),
+            "paged_bytes_full_int8": full_q["bytes"],
+            "fp_over_int8": round(full["bytes"] / max(full_q["bytes"], 1), 2),
         }
     if pp_stages > 1 and shp.kind == "train":
         # per-stage param/activation memplan of the 1F1B pipeline

@@ -28,6 +28,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="sample from the k highest logits only (fused "
+                         "Pallas sampling kernel; needs --temperature > 0)")
+    ap.add_argument("--top-p", type=float, default=None,
+                    help="nucleus sampling mass cutoff (fused kernel; "
+                         "needs --temperature > 0)")
+    ap.add_argument("--kv-dtype",
+                    choices=["native", "int8", "fp8_e4m3", "fp8_e5m2"],
+                    default="native",
+                    help="paged KV-cache storage dtype; sub-byte-accurate "
+                         "per-row scales ride alongside the pools "
+                         "(DESIGN.md §13; paged engine only)")
     ap.add_argument("--init-from", metavar="CKPT", default=None,
                     help="load params from a (possibly differently-"
                          "sharded) training checkpoint directory instead "
@@ -107,7 +119,9 @@ def main():
         eng = PagedServeEngine(cfg, params, block_size=args.block_size,
                                max_batch=args.max_batch or args.batch,
                                max_len=max_len,
-                               prefill_chunk=args.prefill_chunk)
+                               prefill_chunk=args.prefill_chunk,
+                               kv_dtype=args.kv_dtype,
+                               top_k=args.top_k, top_p=args.top_p)
         outs, stats = eng.generate(prompts, max_new_tokens=budgets,
                                    temperature=args.temperature)
         print(f"generated: {len(outs)} requests, "
@@ -121,10 +135,13 @@ def main():
               f"queue wait p50 {stats.queue_wait_p50 * 1e3:.1f}ms "
               f"p99 {stats.queue_wait_p99 * 1e3:.1f}ms")
     else:
+        if args.kv_dtype != "native":
+            ap.error("--kv-dtype applies to the paged engine (--paged)")
         eng = ServeEngine(cfg, params, max_len=max_len)
         toks, stats = eng.generate(prompts,
                                    max_new_tokens=max(budgets),
                                    temperature=args.temperature,
+                                   top_k=args.top_k, top_p=args.top_p,
                                    extra_inputs=extra)
         print("generated:", toks.shape)
     print(f"compile {stats.compile_s:.3f}s prefill {stats.prefill_s:.3f}s "

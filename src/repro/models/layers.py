@@ -250,20 +250,26 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, softcap=None):
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                           window=None, softcap=None):
+                           k_scale=None, v_scale=None, window=None,
+                           softcap=None):
     """One-token attention through the paged pool (DESIGN.md §9).
 
     q: (B, H, hd); pools: (NB, bs, K, hd); block_tables: (B, P);
     lengths: (B,) live tokens including the current one.  Routes to the
     Pallas paged kernel on TPU; on CPU the gather-based oracle is the
     fast path (interpret-mode Pallas runs the grid in Python).
+    ``k_scale``/``v_scale``: (NB, bs, K) f32 per-row scales when the
+    pools are quantized (DESIGN.md §13); both paths fuse the dequant into
+    attention — no full-precision cache copy.
     """
     if _USE_PALLAS:
         from repro.kernels.ops import paged_attention
         return paged_attention(q, k_pages, v_pages, block_tables, lengths,
+                               k_scale=k_scale, v_scale=v_scale,
                                window=window, softcap=softcap)
     from repro.kernels.ref import paged_attention_ref
     return paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               k_scale=k_scale, v_scale=v_scale,
                                window=window, softcap=softcap)
 
 
@@ -400,14 +406,17 @@ def attn_block_decode(p, x, cache_k, cache_v, pos, cfg, spec):
     return out, cache_k, cache_v
 
 
-def attn_block_decode_paged(p, x, k_pages, v_pages, block_tables, pos, cfg,
-                            spec):
-    """Single-token decode through the paged pool. x: (B, 1, D); pools:
-    (NB, bs, K, hd); block_tables: (B, P); pos: (B,) absolute position of
-    the incoming token.  Writes the token's k/v into its block-table slot,
-    then attends through the table.  Returns (out, new_k_pages,
-    new_v_pages).  Inactive lanes must carry sink tables (pos 0, table 0)
-    so their writes land in the sink block."""
+def attn_block_decode_paged(p, x, cache, block_tables, pos, cfg, spec):
+    """Single-token decode through the paged pool. x: (B, 1, D); cache:
+    layer dict with "k"/"v" (NB, bs, K, hd) pools (plus "k_scale"/
+    "v_scale" (NB, bs, K) f32 when the pools are quantized, DESIGN.md
+    §13); block_tables: (B, P); pos: (B,) absolute position of the
+    incoming token.  Writes the token's k/v into its block-table slot
+    (quantizing on append), then attends through the table.  Returns
+    (out, new_cache).  Inactive lanes must carry sink tables (pos 0,
+    table 0) so their writes land in the sink block."""
+    k_pages, v_pages = cache["k"], cache["v"]
+    quantized = "k_scale" in cache
     q, k, v = attn_project_qkv(p, x, cfg)
     cos, sin = rope_freqs(pos[:, None], cfg.hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
@@ -416,15 +425,26 @@ def attn_block_decode_paged(p, x, k_pages, v_pages, block_tables, pos, cfg,
     B = q.shape[0]
     page = block_tables[jnp.arange(B), pos // bs]        # physical block
     idx = page * bs + pos % bs
+    k_row, v_row = k[:, 0], v[:, 0]                      # (B, K, hd)
+    scales = {}
+    if quantized:
+        from repro.kernels.quant import kv_quantize_rows
+        k_row, ks_row = kv_quantize_rows(k_row, k_pages.dtype)
+        v_row, vs_row = kv_quantize_rows(v_row, v_pages.dtype)
+        scales = {
+            "k_scale": cache["k_scale"].reshape(NB * bs, K).at[idx].set(
+                ks_row).reshape(NB, bs, K),
+            "v_scale": cache["v_scale"].reshape(NB * bs, K).at[idx].set(
+                vs_row).reshape(NB, bs, K)}
     k_pages = k_pages.reshape(NB * bs, K, hd).at[idx].set(
-        k[:, 0]).reshape(NB, bs, K, hd)
+        k_row.astype(k_pages.dtype)).reshape(NB, bs, K, hd)
     v_pages = v_pages.reshape(NB * bs, K, hd).at[idx].set(
-        v[:, 0]).reshape(NB, bs, K, hd)
+        v_row.astype(v_pages.dtype)).reshape(NB, bs, K, hd)
     out = paged_decode_attention(q[:, 0], k_pages, v_pages, block_tables,
                                  pos + 1, window=spec.window,
-                                 softcap=cfg.attn_softcap)
+                                 softcap=cfg.attn_softcap, **scales)
     out = jnp.einsum("bshk,hkd->bsd", out[:, None], p["wo"])
-    return out, k_pages, v_pages
+    return out, {"k": k_pages, "v": v_pages, **scales}
 
 
 def cross_attn_block(p, x, enc_kv, cfg):

@@ -42,14 +42,15 @@ class Model:
 
     # -- paged serving (DESIGN.md §9) ---------------------------------------
     def make_paged_cache(self, num_blocks: int, block_size: int,
-                         max_batch: int):
+                         max_batch: int, kv_dtype=None):
         return T.make_paged_cache(self.cfg, num_blocks, block_size,
-                                  max_batch)
+                                  max_batch, kv_dtype=kv_dtype)
 
     def paged_cache_specs(self, num_blocks: int, block_size: int,
-                          max_batch: int):
+                          max_batch: int, kv_dtype=None):
         return jax.eval_shape(lambda: T.make_paged_cache(
-            self.cfg, num_blocks, block_size, max_batch))
+            self.cfg, num_blocks, block_size, max_batch,
+            kv_dtype=kv_dtype))
 
     def decode_paged(self, params, cache, batch):
         return T.decode_step_paged(params, cache, batch, self.cfg)

@@ -207,10 +207,8 @@ def apply_block_decode(p, x, cache, pos, cfg: ArchConfig, spec: LayerSpec,
     attention writes already land in the sink block."""
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn" and block_tables is not None:
-        h, ck, cv = attn_block_decode_paged(p["attn"], h, cache["k"],
-                                            cache["v"], block_tables, pos,
-                                            cfg, spec)
-        new_cache = {"k": ck, "v": cv}
+        h, new_cache = attn_block_decode_paged(p["attn"], h, cache,
+                                               block_tables, pos, cfg, spec)
     elif spec.kind == "attn":
         h, ck, cv = attn_block_decode(p["attn"], h, cache["k"], cache["v"],
                                       pos, cfg, spec)
@@ -663,14 +661,21 @@ def make_cache(cfg: ArchConfig, batch: int, seq_len: int, enc_len: int = 0):
 
 
 def make_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
-                     max_batch: int):
+                     max_batch: int, kv_dtype=None):
     """Zeroed paged cache: per attention pattern-position a physical block
     pool (n_super, num_blocks, block_size, K, hd); SSM layers keep per-slot
     recurrent states (their footprint is position-independent — nothing to
-    page).  Block 0 is the sink (``serve.paging.SINK_BLOCK``)."""
+    page).  Block 0 is the sink (``serve.paging.SINK_BLOCK``).
+
+    ``kv_dtype``: None/"native" stores KV in the activation dtype;
+    "int8"/"fp8_e4m3"/"fp8_e5m2" store quantized rows plus per-(token,
+    kv-head) f32 scale pools "k_scale"/"v_scale" (n_super, num_blocks,
+    block_size, K) riding alongside (DESIGN.md §13)."""
     if cfg.encoder_layers:
         raise ValueError("paged decode does not support enc-dec archs "
                          "(cross-attention caches are per-request static)")
+    from repro.kernels.quant import resolve_kv_dtype
+    qdt = resolve_kv_dtype(kv_dtype)
     dt = cfg.activation_dtype()
     K, hd = cfg.n_kv_heads, cfg.hd
     layers = {}
@@ -678,8 +683,15 @@ def make_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
         n = cfg.n_super
         if spec.kind == "attn":
             layers[f"p{i}"] = {
-                "k": jnp.zeros((n, num_blocks, block_size, K, hd), dt),
-                "v": jnp.zeros((n, num_blocks, block_size, K, hd), dt)}
+                "k": jnp.zeros((n, num_blocks, block_size, K, hd),
+                               qdt or dt),
+                "v": jnp.zeros((n, num_blocks, block_size, K, hd),
+                               qdt or dt)}
+            if qdt is not None:
+                layers[f"p{i}"]["k_scale"] = jnp.zeros(
+                    (n, num_blocks, block_size, K), jnp.float32)
+                layers[f"p{i}"]["v_scale"] = jnp.zeros(
+                    (n, num_blocks, block_size, K), jnp.float32)
         else:
             ch = cfg.d_inner + 2 * cfg.ssm_state
             layers[f"p{i}"] = {
@@ -729,6 +741,7 @@ def _apply_block_prefill_paged(p, x, layer_cache, cfg, spec, *, tables,
     h = rmsnorm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
         k_pool, v_pool = layer_cache["k"], layer_cache["v"]
+        quantized = "k_scale" in layer_cache
         NB, bs, K, hd = k_pool.shape
         P = tables.shape[1]
         q, k, v = attn_project_qkv(p["attn"], h, cfg)
@@ -739,19 +752,38 @@ def _apply_block_prefill_paged(p, x, layer_cache, cfg, spec, *, tables,
         page = jnp.clip(positions // bs, 0, P - 1)
         idx = jnp.where(j < length,
                         tables[0, page] * bs + positions % bs, 0)
+        k_rows, v_rows = k[0], v[0]                       # (C, K, hd)
+        scales = {}
+        if quantized:
+            # quantize on append (DESIGN.md §13): the pool row and its
+            # per-(token, kv-head) scale land together; pad rows (idx 0)
+            # write garbage into the sink block, masked out by kv_len
+            from repro.kernels.quant import kv_dequantize, kv_quantize_rows
+            k_rows, ks_rows = kv_quantize_rows(k_rows, k_pool.dtype)
+            v_rows, vs_rows = kv_quantize_rows(v_rows, v_pool.dtype)
+            scales = {
+                "k_scale": layer_cache["k_scale"].reshape(NB * bs, K)
+                .at[idx].set(ks_rows).reshape(NB, bs, K),
+                "v_scale": layer_cache["v_scale"].reshape(NB * bs, K)
+                .at[idx].set(vs_rows).reshape(NB, bs, K)}
         k_pool = k_pool.reshape(NB * bs, K, hd).at[idx].set(
-            k[0]).reshape(NB, bs, K, hd)
+            k_rows.astype(k_pool.dtype)).reshape(NB, bs, K, hd)
         v_pool = v_pool.reshape(NB * bs, K, hd).at[idx].set(
-            v[0]).reshape(NB, bs, K, hd)
+            v_rows.astype(v_pool.dtype)).reshape(NB, bs, K, hd)
         # gather the logical context (chunk rows included) and attend
         ctx_k = k_pool[tables[0]].reshape(1, P * bs, K, hd)
         ctx_v = v_pool[tables[0]].reshape(1, P * bs, K, hd)
+        if quantized:
+            ctx_k = kv_dequantize(
+                ctx_k, scales["k_scale"][tables[0]].reshape(1, P * bs, K))
+            ctx_v = kv_dequantize(
+                ctx_v, scales["v_scale"][tables[0]].reshape(1, P * bs, K))
         h = paged_context_attention(q, ctx_k, ctx_v, q_offset=start,
                                     kv_len=start + length,
                                     window=spec.window,
                                     softcap=cfg.attn_softcap)
         h = jnp.einsum("bshk,hkd->bsd", h, p["attn"]["wo"])
-        new_cache = {"k": k_pool, "v": v_pool}
+        new_cache = {"k": k_pool, "v": v_pool, **scales}
     else:
         conv_all, ssm_all = layer_cache["conv"], layer_cache["ssm"]
         conv0 = jax.lax.dynamic_slice_in_dim(conv_all, slot, 1, axis=0)

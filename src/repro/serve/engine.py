@@ -87,6 +87,7 @@ class ServeEngine:
 
     def generate(self, prompts: list[list[int]], max_new_tokens: int = 32,
                  temperature: float = 0.0, seed: int = 0,
+                 top_k: int | None = None, top_p: float | None = None,
                  extra_inputs: dict | None = None, warmup: bool = True,
                  pad_prompts_to: int | None = None):
         """Returns (tokens (B, max_new_tokens), ServeStats)."""
@@ -112,7 +113,13 @@ class ServeEngine:
         out = []
         t0 = time.time()
         for i in range(max_new_tokens):
-            if temperature > 0:
+            if temperature > 0 and (top_k is not None or top_p is not None):
+                from repro.kernels.ops import sample_tokens
+                key, sub = jax.random.split(key)
+                u = jax.random.uniform(sub, (logits.shape[0],))
+                nxt = sample_tokens(logits, u, temperature=temperature,
+                                    top_k=top_k, top_p=top_p)
+            elif temperature > 0:
                 key, sub = jax.random.split(key)
                 nxt = jax.random.categorical(sub, logits / temperature, -1)
             else:
@@ -167,7 +174,8 @@ class PagedServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, block_size: int = 16,
                  max_batch: int = 8, max_len: int = 512,
                  prefill_chunk: int = 64, num_blocks: int | None = None,
-                 prefill_chunks_per_step: int = 1):
+                 prefill_chunks_per_step: int = 1, kv_dtype=None,
+                 top_k: int | None = None, top_p: float | None = None):
         if cfg.encoder_layers or cfg.frontend_tokens:
             raise ValueError("paged serving supports decoder-only text "
                              "archs (no enc-dec / multimodal prefixes)")
@@ -179,13 +187,19 @@ class PagedServeEngine:
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.prefill_chunks_per_step = prefill_chunks_per_step
+        # "int8"/"fp8_e4m3"/"fp8_e5m2" quantize the KV pools with per-row
+        # scale tensors riding alongside (DESIGN.md §13); None = native
+        self.kv_dtype = None if kv_dtype == "native" else kv_dtype
+        self.top_k = top_k
+        self.top_p = top_p
         self.max_pages = -(-max_len // block_size)
         if num_blocks is None:
             num_blocks = max_batch * self.max_pages + 1   # +1: sink
         self.alloc = BlockAllocator(num_blocks, block_size)
         self.tables = BlockTables(self.alloc, max_batch, self.max_pages)
         self.cache = self.model.make_paged_cache(num_blocks, block_size,
-                                                 max_batch)
+                                                 max_batch,
+                                                 kv_dtype=self.kv_dtype)
         self._decode = jax.jit(self.model.decode_paged, donate_argnums=(1,))
         self._chunk = jax.jit(self.model.prefill_chunk_paged,
                               donate_argnums=(1,))
@@ -315,6 +329,19 @@ class PagedServeEngine:
             self._last_logits[slot] = logits[0]   # sample at next decode
 
     def _sample(self, logits):
+        """logits: (V,) or (B, V) -> sampled token id(s), same leading
+        shape.  With ``top_k``/``top_p`` set the fused Pallas sampling
+        kernel filters + draws in one pass (DESIGN.md §13); otherwise the
+        plain categorical / argmax path."""
+        if self.temperature > 0 and (self.top_k is not None
+                                     or self.top_p is not None):
+            from repro.kernels.ops import sample_tokens
+            rows = jnp.atleast_2d(logits)
+            self._key, sub = jax.random.split(self._key)
+            u = jax.random.uniform(sub, (rows.shape[0],))
+            toks = sample_tokens(rows, u, temperature=self.temperature,
+                                 top_k=self.top_k, top_p=self.top_p)
+            return toks if logits.ndim > 1 else toks[0]
         if self.temperature > 0:
             self._key, sub = jax.random.split(self._key)
             return jax.random.categorical(sub, logits / self.temperature, -1)
@@ -413,7 +440,8 @@ class PagedServeEngine:
         from repro.core.memplan import kv_cache_bytes_paged
         stats.peak_cache_bytes = (self.alloc.peak_in_use
                                   * kv_cache_bytes_paged(
-                                      self.cfg, [], self.block_size)
+                                      self.cfg, [], self.block_size,
+                                      kv_dtype=self.kv_dtype)
                                   ["block_bytes"])
 
         def pcts(h):
@@ -457,6 +485,7 @@ class PagedServeEngine:
     def generate(self, prompts: list[list[int]],
                  max_new_tokens: int | list[int] = 32,
                  temperature: float = 0.0, seed: int = 0,
+                 top_k: int | None = None, top_p: float | None = None,
                  warmup: bool = True):
         """Batch convenience API: enqueue everything, run to drain.
 
@@ -471,6 +500,10 @@ class PagedServeEngine:
         # seed AFTER warmup so sampled streams are reproducible across
         # warmup settings
         self.temperature = temperature
+        if top_k is not None:
+            self.top_k = top_k
+        if top_p is not None:
+            self.top_p = top_p
         self._key = jax.random.PRNGKey(seed)
         budgets = (max_new_tokens if isinstance(max_new_tokens, (list, tuple))
                    else [max_new_tokens] * len(prompts))

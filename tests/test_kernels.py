@@ -284,6 +284,150 @@ def test_paged_attention_zero_length_lane_is_zero():
 
 
 # ---------------------------------------------------------------------------
+# paged attention schedule tunables (DESIGN.md §13): pages_per_step /
+# head_tile never change results, only the grid
+
+@pytest.mark.parametrize("pps", [1, 2, 4, 5])
+@pytest.mark.parametrize("ht", [1, 2])
+def test_paged_attention_schedule_tunables(pps, ht):
+    from repro.kernels.paged_attention import paged_attention
+    q, kp, vp, tables, lengths = _paged_case(
+        B=3, H=4, K=2, hd=32, bs=8, NB=17, P=5, lengths=[19, 33, 40])
+    out = paged_attention(q, kp, vp, tables, lengths,
+                          pages_per_step=pps, head_tile=ht)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized paged KV-cache (int8 / fp8, DESIGN.md §13)
+
+def _quantize_case(kv_dtype, **kw):
+    from repro.kernels.quant import kv_quantize_rows
+    q, kp, vp, tables, lengths = _paged_case(**kw)
+    kq, ks = kv_quantize_rows(kp, kv_dtype)
+    vq, vs = kv_quantize_rows(vp, kv_dtype)
+    return q, (kp, vp), (kq, vq, ks, vs), tables, lengths
+
+
+@pytest.mark.parametrize("kv_dtype,fp_tol", [
+    ("int8", 2.5e-2), ("fp8_e4m3", 1e-1), ("fp8_e5m2", 2e-1)])
+def test_paged_attention_quantized(kv_dtype, fp_tol):
+    """Kernel with quantized pools: (a) must equal the quantized ORACLE
+    tightly — the fused dequant is the same math; (b) must stay within
+    the quantization error budget of full-precision attention."""
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.quant import resolve_kv_dtype
+    q, (kp, vp), (kq, vq, ks, vs), tables, lengths = _quantize_case(
+        resolve_kv_dtype(kv_dtype),
+        B=3, H=4, K=2, hd=64, bs=8, NB=16, P=4, lengths=[19, 8, 31])
+    out = paged_attention(q, kq, vq, tables, lengths,
+                          k_scale=ks, v_scale=vs)
+    qref = ref.paged_attention_ref(q, kq, vq, tables, lengths,
+                                   k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(qref),
+                               rtol=2e-5, atol=2e-5)
+    fpref = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    assert np.abs(np.asarray(out) - np.asarray(fpref)).max() < fp_tol
+
+
+def test_paged_attention_quantized_with_schedule_and_window():
+    from repro.kernels.paged_attention import paged_attention
+    q, _, (kq, vq, ks, vs), tables, lengths = _quantize_case(
+        jnp.int8, B=2, H=4, K=2, hd=32, bs=8, NB=12, P=3, lengths=[21, 13])
+    want = ref.paged_attention_ref(q, kq, vq, tables, lengths,
+                                   k_scale=ks, v_scale=vs, window=6)
+    out = paged_attention(q, kq, vq, tables, lengths, k_scale=ks,
+                          v_scale=vs, window=6, pages_per_step=2,
+                          head_tile=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kv_quantize_roundtrip():
+    from repro.kernels.quant import (kv_dequantize, kv_quantize_rows,
+                                     resolve_kv_dtype)
+    x = jax.random.normal(KEY, (6, 8, 2, 64)) * 3
+    for name, tol_ in (("int8", 2e-2), ("fp8_e4m3", 2e-1)):
+        qx, s = kv_quantize_rows(x, resolve_kv_dtype(name))
+        assert s.shape == x.shape[:-1]
+        back = kv_dequantize(qx, s)
+        assert np.abs(np.asarray(back - x)).max() < tol_ * 3
+    # all-zero rows survive (scale 0 -> dequant to exact 0, no NaN)
+    qz, sz = kv_quantize_rows(jnp.zeros((2, 4, 1, 8)),
+                              resolve_kv_dtype("int8"))
+    assert np.abs(np.asarray(kv_dequantize(qz, sz))).max() == 0.0
+    with pytest.raises(ValueError):
+        resolve_kv_dtype("int4")
+
+
+# ---------------------------------------------------------------------------
+# fused top-k/top-p sampling kernel vs the ref oracle (DESIGN.md §13)
+
+SAMPLE_CONFIGS = [
+    {"temperature": 0.0},                               # greedy
+    {"temperature": 1.0},                               # plain categorical
+    {"temperature": 1.0, "top_k": 1},                   # degenerate argmax
+    {"temperature": 0.7, "top_k": 8},
+    {"temperature": 0.7, "top_p": 0.8},
+    {"temperature": 0.9, "top_p": 0.999},               # keeps ~everything
+    {"temperature": 0.8, "top_k": 50, "top_p": 0.9},    # both filters
+]
+
+
+@pytest.mark.parametrize("kw", SAMPLE_CONFIGS)
+def test_sampling_kernel_matches_ref(kw):
+    from repro.kernels.sampling import sample_tokens
+    kk = jax.random.split(jax.random.PRNGKey(17), 2)
+    logits = jax.random.normal(kk[0], (7, 257)) * 3.0   # odd B and V
+    u = jax.random.uniform(kk[1], (7,))
+    got = np.asarray(sample_tokens(logits, u, **kw))
+    want = np.asarray(ref.sample_ref(logits, u, **kw))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sampling_top_k_support():
+    """Every draw over many uniforms lies in the true top-k set."""
+    from repro.kernels.sampling import sample_tokens
+    logits = jax.random.normal(jax.random.PRNGKey(5), (1, 101)) * 2
+    topk = set(np.asarray(jax.lax.top_k(logits, 8)[1])[0].tolist())
+    us = jnp.linspace(0.001, 0.999, 41)
+    for u in us:
+        t = int(sample_tokens(logits, u[None], temperature=1.0, top_k=8)[0])
+        assert t in topk
+
+
+def test_sampling_top_p_support():
+    """Draws live in the smallest nucleus with mass >= p (ties included)."""
+    from repro.kernels.sampling import sample_tokens
+    logits = jax.random.normal(jax.random.PRNGKey(6), (1, 64)) * 3
+    p = jax.nn.softmax(logits, -1)[0]
+    order = np.argsort(-np.asarray(p))
+    cum = np.cumsum(np.asarray(p)[order])
+    n_keep = int(np.searchsorted(cum, 0.8)) + 1
+    nucleus = set(order[:n_keep].tolist())
+    for u in jnp.linspace(0.01, 0.99, 23):
+        t = int(sample_tokens(logits, u[None], temperature=1.0,
+                              top_p=0.8)[0])
+        assert t in nucleus
+
+
+def test_sampling_rows_per_step_is_schedule_only():
+    from repro.kernels.sampling import sample_tokens
+    kk = jax.random.split(jax.random.PRNGKey(8), 2)
+    logits = jax.random.normal(kk[0], (6, 130)) * 2
+    u = jax.random.uniform(kk[1], (6,))
+    base = np.asarray(sample_tokens(logits, u, temperature=0.8, top_k=10,
+                                    top_p=0.95, rows_per_step=4))
+    for rps in (1, 3, 8):
+        got = np.asarray(sample_tokens(logits, u, temperature=0.8,
+                                       top_k=10, top_p=0.95,
+                                       rows_per_step=rps))
+        np.testing.assert_array_equal(got, base)
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 
 @pytest.mark.parametrize("shape", [(4, 64), (3, 5, 128), (1, 2048),

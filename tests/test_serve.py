@@ -219,3 +219,85 @@ def test_trained_checkpoint_serves_identically():
     print("HANDOFF_OK", mem[0][:4])
     """, devices=4)
     assert "HANDOFF_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# quantized KV-cache serving + fused sampling (DESIGN.md §13)
+
+def test_paged_int8_greedy_parity_and_bytes():
+    """int8 paged engine: same greedy tokens as the fp engine on a short
+    workload, at the byte-model-predicted fraction of the fp cache (the
+    per-row f32 scales included, peak block count identical)."""
+    from repro.core.memplan import kv_cache_bytes_paged
+    cfg, params = _setup("qwen1.5-0.5b")
+    prompts = _prompts(cfg, (16, 24, 32), seed=2)
+    outs, stats = {}, {}
+    for kd in (None, "int8"):
+        eng = PagedServeEngine(cfg, params, block_size=8, max_batch=3,
+                               max_len=48, prefill_chunk=16, kv_dtype=kd)
+        outs[kd], stats[kd] = eng.generate(prompts, max_new_tokens=6,
+                                           warmup=False)
+    assert [list(map(int, o)) for o in outs["int8"]] == \
+        [list(map(int, o)) for o in outs[None]]
+    assert stats["int8"].peak_cache_blocks == stats[None].peak_cache_blocks
+    # measured peak == model EXACTLY, and >= 1.8x below fp
+    blocks = stats["int8"].peak_cache_blocks
+    model = kv_cache_bytes_paged(cfg, [], 8, kv_dtype="int8")["block_bytes"]
+    assert stats["int8"].peak_cache_bytes == blocks * model
+    assert stats[None].peak_cache_bytes / stats["int8"].peak_cache_bytes \
+        >= 1.8
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3", "fp8_e5m2"])
+def test_paged_cache_byte_model_is_exact(kv_dtype):
+    """memplan's block_bytes == the real pool allocation (codes + scale
+    tensors), leaf for leaf, for every supported storage dtype."""
+    import numpy as np
+    from repro.core.memplan import _DTYPE_BYTES, kv_cache_bytes_paged
+    from repro.models import get_model
+    cfg, _ = _setup("qwen1.5-0.5b")
+    specs = get_model(cfg).paged_cache_specs(10, 8, 4, kv_dtype=kv_dtype)
+    real = sum(int(np.prod(s.shape)) * _DTYPE_BYTES[str(s.dtype)]
+               for s in jax.tree.leaves(specs))
+    model = kv_cache_bytes_paged(cfg, [], 8, kv_dtype=kv_dtype)
+    assert real == model["block_bytes"] * 10
+
+
+def test_paged_engine_rejects_unknown_kv_dtype():
+    cfg, params = _setup("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="kv.dtype"):
+        PagedServeEngine(cfg, params, max_len=32, kv_dtype="int4")
+
+
+def test_paged_engine_fused_sampling_path():
+    """top-k/top-p routes through the fused kernel: reproducible under a
+    seed, different from greedy, tokens in-vocab."""
+    cfg, params = _setup("qwen1.5-0.5b")
+    prompts = _prompts(cfg, (9, 14), seed=4)
+
+    def go(**kw):
+        eng = PagedServeEngine(cfg, params, block_size=8, max_batch=2,
+                               max_len=48, **kw)
+        outs, _ = eng.generate(prompts, max_new_tokens=8, temperature=0.9,
+                               seed=13, warmup=False)
+        return [list(map(int, o)) for o in outs]
+
+    a = go(top_k=25, top_p=0.9)
+    assert a == go(top_k=25, top_p=0.9)            # seed-reproducible
+    assert all(0 <= t < cfg.vocab for o in a for t in o)
+    greedy_eng = PagedServeEngine(cfg, params, block_size=8, max_batch=2,
+                                  max_len=48)
+    g, _ = greedy_eng.generate(prompts, max_new_tokens=8, warmup=False)
+    assert a != [list(map(int, o)) for o in g]
+
+
+def test_static_engine_fused_sampling_path():
+    cfg, params = _setup("qwen1.5-0.5b")
+    prompts = _prompts(cfg, (7, 11), seed=5)
+    eng = ServeEngine(cfg, params, max_len=32)
+    a, _ = eng.generate(prompts, max_new_tokens=6, temperature=0.8,
+                        top_k=30, top_p=0.95, seed=3, warmup=False)
+    b, _ = eng.generate(prompts, max_new_tokens=6, temperature=0.8,
+                        top_k=30, top_p=0.95, seed=3, warmup=False)
+    assert (a == b).all()
+    assert a.shape == (2, 6)
