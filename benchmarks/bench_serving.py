@@ -55,6 +55,15 @@ INT8_LENS = [16, 24, 32]
 INT8_BUDGETS = [4, 6, 8]
 INT8_SEED = 2
 INT8_RATIO_FLOOR = 1.8
+# overload section (ISSUE 9 / DESIGN.md §14): arrival rate > capacity on
+# an undersized pool, optimistic admission + preemption/swap, mixed
+# priorities and a slice of unmeetable deadlines.  Arrivals are
+# step-driven (2 per engine step), so the pressure pattern — and hence
+# the shed/preempt structure — does not depend on wall clock.
+OV_N = 16
+OV_ARRIVALS_PER_STEP = 2
+OV_MAX_QUEUE = 4
+OV_SEED = 5
 
 
 def _workload(vocab: int, seed: int = 2):
@@ -215,6 +224,74 @@ def run(csv: bool = True, kv_dtype: str = "int8"):
     emit("serving_int8_token_mismatches", q_mism,
          f"{sum(sb)} greedy tokens, {INT8_N} short-skewed requests")
 
+    # -- overload: traffic > capacity (ISSUE 9, DESIGN.md §14) -------------
+    # undersized pool + bounded queue + tight deadlines: the engine must
+    # degrade (preempt / shed / time out), never crash, and leave every
+    # request in a typed terminal status
+    from repro.serve import ServeStats, Status
+
+    rng = np.random.RandomState(OV_SEED)
+    ov_lens = rng.randint(16, 65, OV_N)
+    ov_budgets = [int(b) for b in rng.randint(8, 25, OV_N)]
+    ov_prios = [int(p) for p in rng.randint(0, 3, OV_N)]
+    # every 5th request gets a deadline it cannot meet (1ms): exercises
+    # the timeout sweep + deadline-miss accounting
+    ov_deadlines = [1.0 if i % 5 == 3 else None for i in range(OV_N)]
+    ov_prompts = [list(rng.randint(1, cfg.vocab, int(L))) for L in ov_lens]
+    oeng = PagedServeEngine(
+        cfg, params, block_size=16, max_batch=4, max_len=96,
+        prefill_chunk=32, num_blocks=13,        # 12 usable << 4 lanes x 6
+        admission="optimistic", swap_blocks=18,
+        victim_policy="lowest_priority",
+        max_queue=OV_MAX_QUEUE, shed_policy="reject_newest")
+    ost = ServeStats()
+    ost.compile_s = oeng.warmup()
+    tickets, crashes, i = [], 0, 0
+    try:
+        while i < OV_N or oeng.busy:
+            for _ in range(OV_ARRIVALS_PER_STEP):
+                if i < OV_N:
+                    tickets.append(oeng.add_request(
+                        ov_prompts[i], ov_budgets[i],
+                        priority=ov_prios[i],
+                        deadline_ms=ov_deadlines[i]))
+                    i += 1
+            oeng.step(ost)
+        oeng.run(ost)          # drained: fills the lifecycle counters
+    except Exception as e:     # the gate: overload must never raise
+        crashes = 1
+        print(f"# overload section crashed: {type(e).__name__}: {e}",
+              file=sys.stderr)
+    accepted = sum(t.accepted for t in tickets)
+    terminal = sum(1 for t in tickets
+                   if t.rid in oeng.results
+                   and isinstance(oeng.results[t.rid].status, Status))
+    misses = sorted(r.deadline_miss_s for r in oeng.results.values()
+                    if r.deadline_miss_s is not None)
+    emit("serving_overload_crashes", crashes,
+         f"{OV_N} requests at {OV_ARRIVALS_PER_STEP}/step, queue "
+         f"{OV_MAX_QUEUE}, 12-block pool")
+    emit("serving_overload_terminal_coverage",
+         round(terminal / OV_N, 3),
+         "fraction of requests with a typed terminal status (gate: 1.0)")
+    emit("serving_overload_preempt_rate",
+         round(ost.preempted / max(accepted, 1), 3),
+         f"{ost.preempted} preemptions / {accepted} accepted "
+         f"({ost.restored} restored, swap peak {ost.swap_peak_blocks} "
+         f"blocks)")
+    emit("serving_overload_shed_rate", round(ost.shed / OV_N, 3),
+         f"{ost.shed} shed of {OV_N} submitted (bounded queue)")
+    emit("serving_overload_timeouts", ost.timeouts,
+         f"{sum(d is not None for d in ov_deadlines)} requests carried "
+         f"unmeetable 1ms deadlines")
+    emit("serving_overload_deadline_miss_p99_ms",
+         round(float(np.percentile(misses, 99)) * 1e3, 2) if misses else 0,
+         "informational: wall-clock dependent")
+    emit("serving_overload_goodput_tok_per_s",
+         round(ost.goodput_tok_per_s, 1),
+         f"{ost.goodput_tokens} decode tokens of OK requests / "
+         f"{ost.decode_s:.3f}s decode")
+
     # -- kernel ------------------------------------------------------------
     emit("serving_paged_kernel_max_err", _kernel_parity(),
          "pallas interpret vs oracle, GQA + block boundary")
@@ -222,10 +299,24 @@ def run(csv: bool = True, kv_dtype: str = "int8"):
 
 
 def validate(rows) -> list[str]:
-    """Acceptance (ISSUE 4): identical greedy tokens, paged beats static
-    decode tok/s, >= 4x smaller peak cache, kernel matches the oracle."""
+    """Acceptance (ISSUE 4 + 9): identical greedy tokens, paged beats
+    static decode tok/s, >= 4x smaller peak cache, kernel matches the
+    oracle; the overload run crashes zero times, leaves every request in
+    a typed terminal status, and actually exercises preemption+shedding."""
     d = {name: value for name, value, _ in rows}
     failures = []
+    if d.get("serving_overload_crashes", 1) != 0:
+        failures.append("overload section raised instead of degrading")
+    if d.get("serving_overload_terminal_coverage", 0) != 1.0:
+        failures.append(
+            f"overload terminal coverage "
+            f"{d.get('serving_overload_terminal_coverage')} != 1.0")
+    if not d.get("serving_overload_preempt_rate", 0) > 0:
+        failures.append("overload run never preempted (pool not stressed)")
+    if not d.get("serving_overload_shed_rate", 0) > 0:
+        failures.append("overload run never shed (queue bound not hit)")
+    if not d.get("serving_overload_timeouts", 0) > 0:
+        failures.append("overload run never timed out a doomed deadline")
     if d.get("serving_token_mismatches", 1) != 0:
         failures.append(
             f"static and paged engines disagree on "

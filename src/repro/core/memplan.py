@@ -287,6 +287,28 @@ def kv_cache_bytes_paged(cfg, lengths, block_size: int,
             "block_bytes": block_bytes}
 
 
+def swap_pool_bytes(cfg, swap_blocks: int, block_size: int, *,
+                    kv_dtype=None, max_swapped_requests: int = 0) -> dict:
+    """Host-side swap pool footprint (preemption target, DESIGN.md §14).
+
+    A swapped-out request carries its KV block rows — priced at the SAME
+    ``block_bytes`` unit as the device pool, so device + swap capacity
+    add in one currency — plus its fixed per-request SSM slot state (the
+    ``fixed`` term of ``_cache_row_bytes``; zero for pure-attention
+    archs).  ``max_swapped_requests`` bounds the SSM term: the pool
+    holds at most that many entries at once (0 = attn-only accounting).
+    The payload is a bit-exact host copy, so the byte model is exact —
+    ``tests/test_serve_lifecycle.py`` audits it against real payloads.
+    """
+    per_tok, fixed = _cache_row_bytes(cfg, kv_dtype)
+    block_bytes = per_tok * block_size
+    return {"block_bytes": block_bytes,
+            "kv_bytes": swap_blocks * block_bytes,
+            "ssm_bytes_per_request": fixed,
+            "total_bytes": (swap_blocks * block_bytes
+                            + max_swapped_requests * fixed)}
+
+
 def pipeline_stage_bytes(cfg, *, n_stages: int, microbatches: int,
                          global_batch: int, seq_len: int,
                          n_data: int = 1) -> dict:

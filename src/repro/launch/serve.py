@@ -67,6 +67,30 @@ def main():
                     default="auto",
                     help="attention implementation selection "
                          "(PerfFlags.attn_impl)")
+    ap.add_argument("--admission", choices=["reserve", "optimistic"],
+                    default="reserve",
+                    help="paged admission: 'reserve' holds worst-case "
+                         "blocks per request; 'optimistic' admits on "
+                         "prompt fit and preempts on pressure "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--swap-blocks", type=int, default=0,
+                    help="host swap pool capacity in block-equivalents "
+                         "(preempted lanes swap KV there; 0 = recompute-"
+                         "only preemption)")
+    ap.add_argument("--victim-policy",
+                    choices=["lowest_priority", "most_blocks", "lifo"],
+                    default="lowest_priority",
+                    help="which lane preemption evicts first")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired requests end "
+                         "TIMEOUT with resources reclaimed (paged)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue; overflow is shed with "
+                         "a typed rejection, never an exception (paged)")
+    ap.add_argument("--shed-policy",
+                    choices=["reject_newest", "evict_lowest"],
+                    default="reject_newest",
+                    help="what a full queue does to the newest arrival")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record per-request lifecycle spans and write a "
                          "Perfetto / chrome://tracing JSON (DESIGN.md §11)")
@@ -121,13 +145,29 @@ def main():
                                max_len=max_len,
                                prefill_chunk=args.prefill_chunk,
                                kv_dtype=args.kv_dtype,
-                               top_k=args.top_k, top_p=args.top_p)
+                               top_k=args.top_k, top_p=args.top_p,
+                               admission=args.admission,
+                               swap_blocks=args.swap_blocks,
+                               victim_policy=args.victim_policy,
+                               max_queue=args.max_queue,
+                               shed_policy=args.shed_policy)
+        deadlines = ([args.deadline_ms] * len(prompts)
+                     if args.deadline_ms is not None else None)
         outs, stats = eng.generate(prompts, max_new_tokens=budgets,
-                                   temperature=args.temperature)
+                                   temperature=args.temperature,
+                                   deadlines_ms=deadlines)
+        by = {}
+        for res in eng.results.values():
+            by[res.status.value] = by.get(res.status.value, 0) + 1
         print(f"generated: {len(outs)} requests, "
               f"{sum(len(o) for o in outs)} tokens, "
               f"peak cache blocks {stats.peak_cache_blocks} "
               f"({stats.peak_cache_bytes / 2**20:.2f} MiB)")
+        print(f"lifecycle: {by} | preempted {stats.preempted} "
+              f"restored {stats.restored} shed {stats.shed} "
+              f"timeouts {stats.timeouts} | swap peak "
+              f"{stats.swap_peak_blocks} blocks | goodput "
+              f"{stats.goodput_tok_per_s:.1f} tok/s")
         print(f"latency: ttft p50 {stats.ttft_p50 * 1e3:.1f}ms "
               f"p99 {stats.ttft_p99 * 1e3:.1f}ms | "
               f"tpot p50 {stats.tpot_p50 * 1e3:.2f}ms "

@@ -58,6 +58,14 @@ class Model:
     def prefill_chunk_paged(self, params, cache, batch):
         return T.prefill_chunk_paged(params, cache, batch, self.cfg)
 
+    # preemption + swap (DESIGN.md §14): bit-exact host round-trip of one
+    # decode lane's KV block rows + SSM slot state
+    def paged_swap_out(self, cache, slot: int, block_ids) -> dict:
+        return T.paged_swap_out(cache, slot, block_ids)
+
+    def paged_swap_in(self, cache, slot: int, block_ids, payload: dict):
+        return T.paged_swap_in(cache, slot, block_ids, payload)
+
     # -- batch specs ----------------------------------------------------------
     def batch_specs(self, shape_kind: str, global_batch: int, seq_len: int):
         """ShapeDtypeStruct stand-ins for every model input (§input_specs)."""

@@ -701,6 +701,47 @@ def make_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
     return {"layers": layers}
 
 
+def paged_swap_out(cache, slot: int, block_ids) -> dict:
+    """Copy decode lane ``slot``'s live state out of the paged cache to
+    host memory (preemption, DESIGN.md §14): for every attention layer
+    the lane's physical block rows (codes + quant scales when present),
+    for every SSM layer the lane's conv + recurrent state rows.  Returns
+    a flat ``{"p<i>.<key>": np.ndarray}`` dict — a bit-exact snapshot
+    (same dtypes, no recompute) that ``paged_swap_in`` restores under
+    possibly different block ids / a different slot."""
+    ids = np.asarray(list(block_ids), np.int32)
+    out = {}
+    for name, layer in cache["layers"].items():
+        if "k" in layer:                       # attn: block-pool rows
+            for key in layer:                  # k/v (+ k_scale/v_scale)
+                out[f"{name}.{key}"] = np.array(layer[key][:, ids])
+        else:                                  # ssm: per-slot state rows
+            out[f"{name}.conv"] = np.array(layer["conv"][:, slot])
+            out[f"{name}.ssm"] = np.array(layer["ssm"][:, slot])
+    return out
+
+
+def paged_swap_in(cache, slot: int, block_ids, payload: dict):
+    """Inverse of ``paged_swap_out``: write the copied rows back into the
+    pools at fresh ``block_ids`` and the (possibly different) lane
+    ``slot``.  Pure eager updates — the round trip is bit-exact, so a
+    preempted-and-restored request emits identical greedy tokens."""
+    ids = jnp.asarray(np.asarray(list(block_ids), np.int32))
+    new_layers = {}
+    for name, layer in cache["layers"].items():
+        if "k" in layer:
+            new_layers[name] = {
+                key: layer[key].at[:, ids].set(
+                    jnp.asarray(payload[f"{name}.{key}"], layer[key].dtype))
+                for key in layer}
+        else:
+            new_layers[name] = {
+                key: layer[key].at[:, slot].set(
+                    jnp.asarray(payload[f"{name}.{key}"], layer[key].dtype))
+                for key in ("conv", "ssm")}
+    return {**cache, "layers": new_layers}
+
+
 def decode_step_paged(params, cache, batch, cfg: ArchConfig):
     """One continuous-batching decode step.
 

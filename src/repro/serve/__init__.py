@@ -1,5 +1,10 @@
-from .engine import PagedServeEngine, Request, ServeEngine, ServeStats
-from .paging import BlockAllocator, BlockTables, PagingError, SINK_BLOCK
+from .chaos import ChaosError, ChaosHooks
+from .engine import (PagedServeEngine, Request, RequestResult, ServeEngine,
+                     ServeError, ServeStats, Status, Ticket)
+from .paging import (BlockAllocator, BlockTables, PagingError, SINK_BLOCK,
+                     SwapEntry, SwapPool)
 
 __all__ = ["ServeEngine", "PagedServeEngine", "Request", "ServeStats",
-           "BlockAllocator", "BlockTables", "PagingError", "SINK_BLOCK"]
+           "Status", "Ticket", "RequestResult", "ServeError",
+           "BlockAllocator", "BlockTables", "PagingError", "SINK_BLOCK",
+           "SwapEntry", "SwapPool", "ChaosHooks", "ChaosError"]

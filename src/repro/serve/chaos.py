@@ -1,0 +1,85 @@
+"""Fault injection for the serve path (the serving sibling of the
+checkpoint layer's ``FailingFS``, DESIGN.md §12/§14).
+
+``ChaosHooks`` is an injectable seam threaded through the block
+allocator and ``PagedServeEngine``: every hook is a host-side call at a
+well-defined point in the step loop, so an injected fault models a real
+failure mode without patching engine internals:
+
+* ``fail_alloc_after``  — the allocator raises ``ChaosError`` on every
+  ``alloc()`` after N successful calls (a device pool that goes bad
+  mid-run; the engine must fail the *growing request*, not the process).
+* ``fail_decode_at_step`` — one transient device fault immediately
+  before the Nth batched decode dispatch (fires once; the engine retries
+  the identical step — no cache mutation has happened yet).
+* ``poison_rid`` — every device-path touch (prefill chunk, decode lane
+  assembly) of request ``rid`` faults: the poisoned request must end in
+  a terminal ``ERROR`` with its blocks/slot/SSM state reclaimed while
+  every other lane's tokens are unaffected.
+* ``corrupt_swap_rid`` — flips one byte of the request's swap payload on
+  swap-out.  The engine checksums payloads at swap-out and verifies on
+  restore, so the corruption is *detected* and the request fails typed
+  instead of silently decoding from garbage KV.
+* ``admission_delay_s`` — sleeps before each admission pass (a slow
+  frontend; exercises queue-wait accounting and deadline expiry).
+
+All hooks are no-ops at their defaults, and the engine disables the seam
+during warmup — the throwaway compile request is not traffic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class ChaosError(RuntimeError):
+    """An injected fault (never raised by real engine logic)."""
+
+
+@dataclass
+class ChaosHooks:
+    fail_alloc_after: int | None = None
+    fail_decode_at_step: int | None = None
+    poison_rid: int | None = None
+    corrupt_swap_rid: int | None = None
+    admission_delay_s: float = 0.0
+    # observability: how often each seam was crossed / fired
+    allocs: int = 0
+    decode_steps: int = 0
+    faults_fired: int = 0
+    corrupted: list[int] = field(default_factory=list)
+
+    def on_alloc(self, n: int) -> None:
+        if self.fail_alloc_after is not None \
+                and self.allocs >= self.fail_alloc_after:
+            self.faults_fired += 1
+            raise ChaosError(
+                f"chaos: block alloc failed (after {self.allocs} allocs)")
+        self.allocs += 1
+
+    def on_decode_step(self) -> None:
+        self.decode_steps += 1
+        if self.fail_decode_at_step == self.decode_steps:
+            self.faults_fired += 1
+            raise ChaosError(
+                f"chaos: decode step {self.decode_steps} faulted")
+
+    def check_request(self, rid: int) -> None:
+        if self.poison_rid == rid:
+            self.faults_fired += 1
+            raise ChaosError(f"chaos: poisoned request {rid}")
+
+    def on_swap_out(self, rid: int, arrays: dict) -> None:
+        """Corrupt one byte of ``rid``'s payload in place (post-checksum,
+        so the engine's restore-time verification must catch it)."""
+        if self.corrupt_swap_rid != rid or not arrays:
+            return
+        name = sorted(arrays)[0]
+        buf = arrays[name].view("uint8").reshape(-1)
+        buf[0] ^= 0xFF
+        self.faults_fired += 1
+        self.corrupted.append(rid)
+
+    def on_admission(self) -> None:
+        if self.admission_delay_s > 0:
+            time.sleep(self.admission_delay_s)

@@ -18,9 +18,15 @@ Conventions:
   ``[p*block_size, (p+1)*block_size)``.
 * the allocator tracks ``peak_in_use`` so benchmarks can report the true
   high-water cache footprint against the dense ``B x max_len`` padding.
+* ``SwapPool`` is the host-side block reservoir preemption swaps into
+  (DESIGN.md §14): a bounded capacity of block-equivalents, per-request
+  entries carrying the copied KV rows + SSM slot state + a crc32 per
+  array so a corrupted round-trip is *detected* at restore, never
+  silently decoded from.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -29,7 +35,9 @@ SINK_BLOCK = 0
 
 
 class PagingError(RuntimeError):
-    pass
+    """A paging *invariant* violation (double-free, sink free, impossible
+    request).  Overload conditions are NOT this — the engine reports
+    those as typed rejection/terminal results (DESIGN.md §14)."""
 
 
 @dataclass
@@ -48,6 +56,9 @@ class BlockAllocator:
     _free: list[int] = field(default_factory=list)
     _in_use: set[int] = field(default_factory=set)
     peak_in_use: int = 0
+    # fault-injection seam (serve/chaos.py): ``on_alloc`` may raise
+    # ChaosError — a *device* fault, distinct from PagingError shortage
+    chaos: object = None
 
     def __post_init__(self):
         if self.num_blocks < 2:
@@ -64,6 +75,8 @@ class BlockAllocator:
         return len(self._in_use)
 
     def alloc(self, n: int = 1) -> list[int]:
+        if self.chaos is not None:
+            self.chaos.on_alloc(n)
         if n > len(self._free):
             raise PagingError(
                 f"out of cache blocks: want {n}, have {len(self._free)} "
@@ -121,8 +134,103 @@ class BlockTables:
         self.tables[slot, :] = SINK_BLOCK
         self._n_pages[slot] = 0
 
+    def adopt(self, slot: int, blocks: list[int]) -> None:
+        """Install already-allocated ``blocks`` as ``slot``'s table (the
+        swap-restore path: the lane's pages come back under fresh
+        physical ids).  The slot must be empty."""
+        if int(self._n_pages[slot]):
+            raise PagingError(f"adopt into non-empty slot {slot}")
+        if len(blocks) > self.max_pages:
+            raise PagingError(
+                f"adopt of {len(blocks)} blocks > max_pages={self.max_pages}")
+        for p, blk in enumerate(blocks):
+            self.tables[slot, p] = blk
+        self._n_pages[slot] = len(blocks)
+
     def row(self, slot: int) -> np.ndarray:
         return self.tables[slot]
 
     def n_pages(self, slot: int) -> int:
         return int(self._n_pages[slot])
+
+
+# ---------------------------------------------------------------------------
+# host-side swap pool (preemption target; DESIGN.md §14)
+
+
+def checksum_arrays(arrays: dict) -> dict:
+    """crc32 per payload array — computed at swap-out, verified at
+    restore, so a corrupted host round-trip fails *typed* (terminal
+    ``ERROR``) instead of silently resuming from garbage KV."""
+    return {name: zlib.crc32(np.ascontiguousarray(a).view("uint8").tobytes())
+            for name, a in arrays.items()}
+
+
+@dataclass
+class SwapEntry:
+    """One preempted request's resumable state: the copied KV block rows
+    (+ quant scales) and SSM slot state keyed by layer, the lane's decode
+    position / prefill progress, and the pending first-token logits if
+    prefill had finished but the token was not yet sampled."""
+    rid: int
+    n_blocks: int
+    arrays: dict[str, np.ndarray]
+    crcs: dict[str, int]
+    pos: int
+    prefilled: int
+    last_logits: np.ndarray | None = None
+
+    def verify(self) -> bool:
+        return checksum_arrays(self.arrays) == self.crcs
+
+
+class SwapPool:
+    """Bounded host-side reservoir of swapped-out request state.
+
+    Capacity is counted in *block-equivalents* (same unit as the device
+    allocator), so ``core.memplan.swap_pool_bytes`` prices it with the
+    identical per-block byte model.  ``put`` of an entry that does not
+    fit raises ``PagingError`` — callers must check ``can_hold`` first
+    (the engine falls back to recompute-preemption when the pool is
+    full, so overload degrades instead of erroring).
+    """
+
+    def __init__(self, capacity_blocks: int):
+        self.capacity_blocks = int(capacity_blocks)
+        self._entries: dict[int, SwapEntry] = {}
+        self.in_use = 0
+        self.peak_in_use = 0
+        self.total_swapped = 0          # lifetime swap-out count
+
+    def can_hold(self, n_blocks: int) -> bool:
+        return self.in_use + n_blocks <= self.capacity_blocks
+
+    def blocks_of(self, rid: int) -> int:
+        """Block count of ``rid``'s entry (restore feasibility check)."""
+        return self._entries[rid].n_blocks
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def put(self, entry: SwapEntry) -> None:
+        if entry.rid in self._entries:
+            raise PagingError(f"rid {entry.rid} already swapped out")
+        if not self.can_hold(entry.n_blocks):
+            raise PagingError(
+                f"swap pool full: want {entry.n_blocks} blocks, "
+                f"{self.capacity_blocks - self.in_use} free "
+                f"of {self.capacity_blocks}")
+        self._entries[entry.rid] = entry
+        self.in_use += entry.n_blocks
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.total_swapped += 1
+
+    def pop(self, rid: int) -> SwapEntry:
+        if rid not in self._entries:
+            raise PagingError(f"rid {rid} is not swapped out")
+        entry = self._entries.pop(rid)
+        self.in_use -= entry.n_blocks
+        return entry

@@ -129,17 +129,25 @@ def test_paged_matches_static_with_slot_reuse():
 
 
 def test_paged_rejects_overlong_and_encdec():
+    """Unservable requests get a TYPED rejection (DESIGN.md §14) — no
+    exception escapes add_request for an overload/shape problem."""
+    from repro.serve import Status
+    from repro.serve.engine import REJECT_PROMPT_TOO_LONG
+
     cfg, params = _setup("qwen1.5-0.5b")
     eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
                            max_len=16)
-    with pytest.raises(PagingError):
-        eng.add_request([1] * 15, 8)           # prompt + budget > max_len
+    t = eng.add_request([1] * 15, 8)           # prompt + budget > max_len
+    assert not t.accepted and t.reason == REJECT_PROMPT_TOO_LONG
+    assert eng.results[t.rid].status is Status.SHED
+    assert not eng.busy                        # never enqueued
     tiny = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
                             max_len=16, num_blocks=3)
-    with pytest.raises(PagingError):           # could never be admitted:
-        tiny.add_request([1] * 10, 4)          # needs 4 blocks of the 2
+    t = tiny.add_request([1] * 10, 4)          # needs 4 blocks of the 2:
+    assert not t.accepted                      # could never be admitted
+    assert t.reason == REJECT_PROMPT_TOO_LONG
     wcfg, wparams = _setup("whisper-base")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError):            # arch limitation, not load
         PagedServeEngine(wcfg, wparams)
 
 

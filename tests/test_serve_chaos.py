@@ -1,0 +1,158 @@
+"""Serve-path fault injection (ISSUE 9 / DESIGN.md §14): the engine must
+isolate injected faults to the affected request — typed terminal ERROR,
+resources reclaimed, every other lane bit-exact — and retry transient
+device faults.  Runs under the ``chaos`` CI shard, which uploads the
+engine metrics JSONL written by the session fixture below."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.models import get_model, reduced
+from repro.serve import ChaosHooks, PagedServeEngine, Status
+
+pytestmark = pytest.mark.chaos
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _dump_chaos_metrics():
+    """CI artifact: engine counters/histograms accumulated across the
+    chaos shard, written where the workflow's CHAOS_METRICS_PATH points."""
+    yield
+    path = os.environ.get("CHAOS_METRICS_PATH")
+    if path:
+        obs.get_metrics().dump_jsonl(path)
+
+
+def _setup(arch="qwen1.5-0.5b"):
+    cfg = reduced(get_config(arch))
+    params = get_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, cfg.vocab, L)) for L in lengths]
+
+
+def test_poisoned_request_is_isolated():
+    """A request whose every device-path touch faults must end in a
+    terminal ERROR with its blocks/slot reclaimed, while the other
+    lanes' greedy tokens are bit-identical to a fault-free run."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, (9, 6, 11))
+    clean = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                             max_len=40, prefill_chunk=8)
+    want, _ = clean.generate(prompts, max_new_tokens=6, warmup=False)
+
+    chaos = ChaosHooks(poison_rid=1)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8, chaos=chaos)
+    outs, stats = eng.generate(prompts, max_new_tokens=6, warmup=False)
+    assert eng.results[1].status is Status.ERROR
+    assert "poison" in eng.results[1].reason
+    assert chaos.faults_fired >= 1
+    assert outs[0] == want[0] and outs[2] == want[2]   # bystanders exact
+    assert stats.errors == 1
+    assert eng.alloc.in_use == 0 and not eng.busy      # nothing leaked
+
+
+def test_alloc_fault_fails_request_not_process():
+    """Once the injected allocator fault trips, growing requests end in
+    typed ERROR — the engine keeps draining, frees stay consistent, and
+    no exception escapes run()."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, (8, 8, 8))
+    chaos = ChaosHooks(fail_alloc_after=8)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=48, prefill_chunk=8, chaos=chaos)
+    outs, stats = eng.generate(prompts, max_new_tokens=12, warmup=False)
+    statuses = [eng.results[rid].status for rid in range(3)]
+    assert Status.ERROR in statuses                    # the fault landed
+    assert all(s in (Status.OK, Status.ERROR) for s in statuses)
+    for rid, s in enumerate(statuses):                 # typed, actionable
+        if s is Status.ERROR:
+            assert "alloc fault" in eng.results[rid].reason
+    assert chaos.faults_fired >= 1
+    assert eng.alloc.in_use == 0 and not eng.busy
+
+
+def test_corrupted_swap_roundtrip_is_detected():
+    """A swap payload corrupted in flight must be caught by the restore-
+    time crc check: the request fails typed, it is never resumed from
+    garbage KV, and the swap entry is released."""
+    cfg, params = _setup()
+    chaos = ChaosHooks(corrupt_swap_rid=0)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8, swap_blocks=16,
+                           chaos=chaos)
+    t0 = eng.add_request(_prompts(cfg, (9,))[0], 10)
+    t1 = eng.add_request(_prompts(cfg, (6,))[0], 6)
+    for _ in range(50):
+        eng.step()
+        req0 = next((r for r in eng.slots if r and r.rid == t0.rid), None)
+        if req0 is not None and len(req0.out) >= 2:
+            break
+    assert eng.preempt(t0.rid) and t0.rid in eng.swap
+    assert chaos.corrupted == [t0.rid]
+    eng.run()
+    assert eng.results[t0.rid].status is Status.ERROR
+    assert "corrupt" in eng.results[t0.rid].reason
+    assert eng.results[t1.rid].status is Status.OK
+    assert len(eng.swap) == 0 and eng.alloc.in_use == 0
+
+
+def test_transient_decode_fault_is_retried():
+    """A decode-step fault injected BEFORE dispatch mutates nothing, so
+    the engine retries the identical step: every request still finishes
+    OK with tokens bit-identical to a fault-free run."""
+    cfg, params = _setup()
+    prompts = _prompts(cfg, (9, 6))
+    clean = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                             max_len=40, prefill_chunk=8)
+    want, _ = clean.generate(prompts, max_new_tokens=6, warmup=False)
+
+    chaos = ChaosHooks(fail_decode_at_step=3)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8, chaos=chaos)
+    outs, _ = eng.generate(prompts, max_new_tokens=6, warmup=False)
+    assert chaos.faults_fired == 1
+    assert outs == want
+    assert all(r.status is Status.OK for r in eng.results.values())
+
+
+def test_admission_delay_expires_tight_deadlines():
+    """A slow admission path (injected delay) pushes queued requests past
+    their deadlines: they end TIMEOUT via the sweep, never crash."""
+    cfg, params = _setup()
+    chaos = ChaosHooks(admission_delay_s=0.02)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, chaos=chaos)
+    p = _prompts(cfg, (6,))[0]
+    t_doomed = eng.add_request(p, 4, deadline_ms=5)
+    t_fine = eng.add_request(p, 4)
+    stats = eng.run()
+    assert eng.results[t_doomed.rid].status is Status.TIMEOUT
+    assert eng.results[t_fine.rid].status is Status.OK
+    assert stats.timeouts == 1
+    assert eng.alloc.in_use == 0 and not eng.busy
+
+
+def test_warmup_is_immune_to_chaos():
+    """The warmup request is not traffic: even with every hook armed,
+    warmup compiles cleanly and the seam re-arms afterwards."""
+    cfg, params = _setup()
+    chaos = ChaosHooks(fail_alloc_after=0, admission_delay_s=0.0)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, chaos=chaos)
+    compile_s = eng.warmup()
+    assert compile_s > 0
+    assert eng.chaos is chaos and eng.alloc.chaos is chaos   # re-armed
+    t = eng.add_request(_prompts(cfg, (6,))[0], 3)
+    eng.run()
+    assert eng.results[t.rid].status is Status.ERROR   # fault now live

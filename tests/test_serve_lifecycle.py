@@ -1,0 +1,327 @@
+"""Overload-robust serving lifecycle (ISSUE 9 / DESIGN.md §14):
+preempt -> swap -> restore token parity, cancellation/timeout resource
+reclamation, shedding admission, optimistic-admission progress, typed
+engine errors, and the swap-pool byte model."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.memplan import swap_pool_bytes
+from repro.models import get_model, reduced
+from repro.serve import PagedServeEngine, ServeEngine, ServeError, Status
+from repro.serve.engine import (REJECT_EVICTED, REJECT_PROMPT_TOO_LONG,
+                                REJECT_QUEUE_FULL)
+
+from hypothesis_compat import given, settings, st
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch):
+    cfg = reduced(get_config(arch))
+    params = get_model(cfg).init(KEY)
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=1):
+    rng = np.random.RandomState(seed)
+    return [list(rng.randint(1, cfg.vocab, L)) for L in lengths]
+
+
+def _drain(eng, stats=None, max_steps=5000):
+    return eng.run(stats, max_steps=max_steps)
+
+
+# ---------------------------------------------------------------------------
+# preempt -> swap -> restore parity
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma2-2b",
+                                  "mamba2-130m"])
+def test_preempt_swap_restore_token_parity(arch):
+    """A request preempted mid-decode (KV blocks + SSM slot state swapped
+    to host) and later restored must emit bit-identical greedy tokens to
+    an uninterrupted run — the acceptance bar for swap being a true
+    bit-exact round-trip.  Covers GQA (qwen), sliding-window + softcap
+    (gemma2) and the SSM recurrent state (mamba2)."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg, (9, 6))
+    ref = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8)
+    want, _ = ref.generate(prompts, max_new_tokens=8, warmup=False)
+
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8, swap_blocks=16)
+    t0 = eng.add_request(prompts[0], 8)
+    t1 = eng.add_request(prompts[1], 8)
+    # decode a few tokens, then forcibly evict request 0 mid-stream
+    for _ in range(50):
+        eng.step()
+        req0 = next((r for r in eng.slots if r and r.rid == t0.rid), None)
+        if req0 is not None and len(req0.out) >= 3:
+            break
+    assert eng.preempt(t0.rid)
+    assert t0.rid in eng.swap                  # swap path, not recompute
+    _drain(eng)
+    assert eng.results[t0.rid].status is Status.OK
+    assert eng.results[t0.rid].preemptions >= 1
+    assert eng.results[t1.rid].status is Status.OK
+    assert eng.completed[t0.rid] == want[0]
+    assert eng.completed[t1.rid] == want[1]
+    assert eng.alloc.in_use == 0 and len(eng.swap) == 0
+
+
+def test_preempt_recompute_restore_token_parity():
+    """With no swap pool the engine falls back to recompute-preemption
+    (drop the blocks, re-prefill prompt + emitted tokens on restore);
+    greedy tokens must still match the uninterrupted run."""
+    cfg, params = _setup("qwen1.5-0.5b")
+    prompts = _prompts(cfg, (9, 6))
+    ref = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8)
+    want, _ = ref.generate(prompts, max_new_tokens=8, warmup=False)
+
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=40, prefill_chunk=8, swap_blocks=0)
+    t0 = eng.add_request(prompts[0], 8)
+    t1 = eng.add_request(prompts[1], 8)
+    for _ in range(50):
+        eng.step()
+        req0 = next((r for r in eng.slots if r and r.rid == t0.rid), None)
+        if req0 is not None and len(req0.out) >= 3:
+            break
+    assert eng.preempt(t0.rid)
+    assert t0.rid not in eng.swap              # recompute path
+    _drain(eng)
+    assert eng.results[t0.rid].status is Status.OK
+    assert eng.completed[t0.rid] == want[0]
+    assert eng.completed[t1.rid] == want[1]
+    assert eng.alloc.in_use == 0
+
+
+def test_optimistic_admission_preempts_under_pressure():
+    """An undersized pool under optimistic admission: worst-case demand
+    exceeds the blocks, so lanes preempt each other — but every request
+    still finishes OK with correct greedy tokens, and the pool drains."""
+    cfg, params = _setup("qwen1.5-0.5b")
+    prompts = _prompts(cfg, (8, 8, 8))
+    ref = PagedServeEngine(cfg, params, block_size=4, max_batch=3,
+                           max_len=32, prefill_chunk=8)
+    want, _ = ref.generate(prompts, max_new_tokens=10, warmup=False)
+
+    # 3 requests x ceil(18/4)=5 worst-case pages = 15 > 8 usable blocks
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=3,
+                           max_len=32, prefill_chunk=8, num_blocks=9,
+                           admission="optimistic", swap_blocks=16)
+    outs, stats = eng.generate(prompts, max_new_tokens=10, warmup=False)
+    assert stats.preempted > 0 and stats.restored > 0
+    for i, t in enumerate(want):
+        assert outs[i] == t, f"request {i}"
+    assert all(r.status is Status.OK for r in eng.results.values())
+    assert eng.alloc.in_use == 0 and len(eng.swap) == 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation / deadlines reclaim resources
+
+
+def test_cancel_frees_blocks_and_slot():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=32, prefill_chunk=8)
+    t_run = eng.add_request(_prompts(cfg, (8,))[0], 20)
+    t_queued = eng.add_request(_prompts(cfg, (6,))[0], 20)
+    t_queued2 = eng.add_request(_prompts(cfg, (6,))[0], 4)
+    eng.step()                                 # t_run admitted + prefilling
+    assert eng.alloc.in_use > 0
+    assert eng.cancel(t_run.rid)               # cancel while running
+    assert eng.results[t_run.rid].status is Status.CANCELLED
+    assert eng.cancel(t_queued.rid)            # cancel in queue
+    assert eng.results[t_queued.rid].status is Status.CANCELLED
+    assert not eng.cancel(t_queued.rid)        # already terminal
+    assert not eng.cancel(10_000)              # unknown rid
+    _drain(eng)
+    assert eng.results[t_queued2.rid].status is Status.OK
+    assert eng.alloc.in_use == 0               # no leaked blocks
+    assert all(r is None for r in eng.slots)
+
+
+def test_cancel_while_preempted_drops_swap_entry():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, prefill_chunk=8, swap_blocks=8)
+    t = eng.add_request(_prompts(cfg, (8,))[0], 10)
+    for _ in range(5):
+        eng.step()
+    assert eng.preempt(t.rid) and t.rid in eng.swap
+    assert eng.cancel(t.rid)
+    assert t.rid not in eng.swap and len(eng.swap) == 0
+    assert eng.results[t.rid].status is Status.CANCELLED
+    assert eng.alloc.in_use == 0 and not eng.busy
+
+
+def test_deadline_timeout_reclaims_and_records_miss():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=2,
+                           max_len=64, prefill_chunk=8)
+    # a deadline that cannot be met: expires while running or queued
+    t_doomed = eng.add_request(_prompts(cfg, (8,))[0], 40, deadline_ms=0.01)
+    t_fine = eng.add_request(_prompts(cfg, (6,))[0], 4)
+    stats = _drain(eng)
+    res = eng.results[t_doomed.rid]
+    assert res.status is Status.TIMEOUT
+    assert res.deadline_miss_s is not None and res.deadline_miss_s > 0
+    assert stats.timeouts == 1
+    assert eng.results[t_fine.rid].status is Status.OK
+    assert eng.alloc.in_use == 0 and not eng.busy
+
+
+# ---------------------------------------------------------------------------
+# shedding admission
+
+
+def test_queue_full_rejects_newest_with_retry_hint():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, max_queue=2)
+    p = _prompts(cfg, (4,))[0]
+    assert eng.add_request(p, 2).accepted
+    assert eng.add_request(p, 2).accepted
+    t = eng.add_request(p, 2)
+    assert not t.accepted and t.reason == REJECT_QUEUE_FULL
+    assert t.retry_after_s is not None and t.retry_after_s > 0
+    assert eng.results[t.rid].status is Status.SHED
+    _drain(eng)                                # survivors still complete
+    assert len([r for r in eng.results.values()
+                if r.status is Status.OK]) == 2
+
+
+def test_queue_full_evict_lowest_respects_priority():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, max_queue=2,
+                           shed_policy="evict_lowest")
+    p = _prompts(cfg, (4,))[0]
+    t_low = eng.add_request(p, 2, priority=0)
+    eng.add_request(p, 2, priority=5)
+    t_high = eng.add_request(p, 2, priority=9)     # evicts t_low
+    assert t_high.accepted
+    assert eng.results[t_low.rid].status is Status.SHED
+    assert eng.results[t_low.rid].reason == REJECT_EVICTED
+    t_lower = eng.add_request(p, 2, priority=-1)   # nothing below it
+    assert not t_lower.accepted and t_lower.reason == REJECT_QUEUE_FULL
+
+
+def test_add_request_never_raises_on_overload():
+    """The admission loop survives any mix of unservable requests."""
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=16, max_queue=1)
+    tickets = [eng.add_request([1] * n, b)
+               for n, b in [(30, 1), (4, 40), (4, 2), (4, 2), (4, 2)]]
+    assert [t.accepted for t in tickets] == [False, False, True, False,
+                                             False]
+    assert tickets[0].reason == REJECT_PROMPT_TOO_LONG
+    assert tickets[3].reason == REJECT_QUEUE_FULL
+    _drain(eng)
+    assert {r.status for r in eng.results.values()} == {Status.OK,
+                                                        Status.SHED}
+
+
+# ---------------------------------------------------------------------------
+# progress / typed engine errors
+
+
+def _random_overload_run(seed: int):
+    cfg, params = _setup("qwen1.5-0.5b")
+    rng = np.random.RandomState(seed)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=3,
+                           max_len=32, prefill_chunk=8, num_blocks=10,
+                           admission="optimistic",
+                           swap_blocks=int(rng.randint(0, 12)),
+                           victim_policy=["lowest_priority", "most_blocks",
+                                          "lifo"][seed % 3],
+                           max_queue=6, shed_policy="reject_newest")
+    tickets = []
+    for _ in range(int(rng.randint(4, 9))):
+        prompt = list(rng.randint(1, cfg.vocab, rng.randint(2, 14)))
+        tickets.append(eng.add_request(
+            prompt, int(rng.randint(1, 12)),
+            priority=int(rng.randint(0, 3))))
+        if rng.rand() < 0.2 and tickets[-1].accepted:
+            eng.cancel(tickets[-1].rid)
+        eng.step()
+    eng.run(max_steps=2000)                    # ServeError if ever stuck
+    assert not eng.busy
+    assert eng.alloc.in_use == 0 and len(eng.swap) == 0
+    for t in tickets:                          # every request is terminal
+        assert t.rid in eng.results
+        assert eng.results[t.rid].status in (Status.OK, Status.SHED,
+                                             Status.CANCELLED)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_optimistic_admission_never_deadlocks(seed):
+    """Randomized overload workloads (mixed priorities, cancels, tiny
+    pool, all victim policies) always drain: the strict precedence order
+    guarantees the highest-precedence live request can always grow."""
+    _random_overload_run(seed)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=10, deadline=None)
+def test_optimistic_admission_never_deadlocks_property(seed):
+    """Property form of the drain guarantee (skips if hypothesis is not
+    installed; the seeded test above always runs)."""
+    _random_overload_run(int(seed) % 1000)
+
+
+def test_serve_error_names_stuck_requests():
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=64)
+    t = eng.add_request(_prompts(cfg, (8,))[0], 40)
+    with pytest.raises(ServeError) as ei:
+        eng.run(max_steps=1)                   # cannot finish in one step
+    assert t.rid in ei.value.stuck_rids
+    assert ei.value.blocks_in_use > 0
+    assert str(t.rid) in str(ei.value)         # actionable message
+
+
+# ---------------------------------------------------------------------------
+# swap-pool byte model is exact
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-130m"])
+def test_swap_payload_matches_byte_model(arch):
+    """The host bytes of a real swapped-out payload equal the
+    ``memplan.swap_pool_bytes`` model exactly: KV rows priced at the
+    device ``block_bytes`` unit plus the fixed SSM slot state."""
+    cfg, params = _setup(arch)
+    eng = PagedServeEngine(cfg, params, block_size=4, max_batch=1,
+                           max_len=32, prefill_chunk=8, swap_blocks=16)
+    t = eng.add_request(_prompts(cfg, (9,))[0], 8)
+    for _ in range(4):
+        eng.step()
+    slot = next(s for s, r in enumerate(eng.slots) if r is not None)
+    n = eng.tables.n_pages(slot)
+    blocks = [int(b) for b in eng.tables.row(slot)[:n]]
+    payload = eng.model.paged_swap_out(eng.cache, slot, blocks)
+    got = sum(a.nbytes for a in payload.values())
+    model = swap_pool_bytes(cfg, n, eng.block_size,
+                            max_swapped_requests=1)
+    assert got == model["total_bytes"]
+    assert t.rid not in eng.swap               # peek did not mutate state
+    _drain(eng)
+    assert eng.results[t.rid].status is Status.OK
+
+
+def test_static_engine_untouched_by_lifecycle_api():
+    """The static engine keeps its simple contract (regression guard for
+    the lifecycle refactor)."""
+    cfg, params = _setup("qwen1.5-0.5b")
+    eng = ServeEngine(cfg, params, max_len=24)
+    toks, _ = eng.generate(_prompts(cfg, (5, 9)), max_new_tokens=4,
+                           warmup=False)
+    assert toks.shape == (2, 4)
