@@ -12,12 +12,20 @@ cross-validates them two ways:
   attribute the same per-bucket traffic shares (``bytes_l2_by_key``) and
   keep the §3.3 level-1/level-2 ratio per key.
 
+Eventual mode (DESIGN.md §15) cross-validates the bounded-staleness
+schedule: each of the ``max_staleness + 1`` phase variants is lowered
+separately and its compiled cross-pod all-reduce bytes must equal the
+analytic ``eventual_crosspod_bytes`` model EXACTLY; the phases must sum
+to the monolithic hierarchical total (every bucket still crosses the pod
+boundary once per period), and the steady-state per-step mean must show
+the ``period``× reduction.
+
 Multi-device lowering needs --xla_force_host_platform_device_count set
 before jax initializes, so the measurement runs in a subprocess and
 reports one CSV row per (mode, metric).
 
 Usage:  PYTHONPATH=src python benchmarks/bench_dist.py [--mode MODE]
-        MODE in {flat, hier, bucketed, all} (default all)
+        MODE in {flat, hier, bucketed, eventual, all} (default all)
 
 CSV: name,value,derived
 """
@@ -39,6 +47,7 @@ N_ELEMS = N_LEAVES * LEAF_ELEMS          # 262144 floats = 1 MiB
 BUCKET_BYTES = 256 * 1024
 STEPS = 20
 N_MACHINES, DEVS_PER_MACHINE = 2, 4      # = mesh (pod, data)
+MAX_STALENESS = 2                        # eventual: 3-phase round robin
 
 _BODY = f"""
 import os
@@ -57,7 +66,7 @@ g = {{f"w{{i}}": jnp.asarray(rng.randn(W, {LEAF_ELEMS}), jnp.float32)
      for i in range({N_LEAVES})}}
 
 with jax.set_mesh(mesh):
-    for mode in MODES:
+    for mode in [m for m in MODES if m != "eventual"]:
         f = jax.jit(lambda x, mode=mode: gradient_sync(
             mesh, x, mode=mode, bucket_bytes={BUCKET_BYTES}))
         coll = collective_bytes(f.lower(g).compile().as_text())
@@ -89,14 +98,50 @@ with jax.set_mesh(mesh):
                   f"{{coll['raw']['all-reduce']}}")
             print(f"RESULT,bucketed,bucket{{i}}_payload_bytes,"
                   f"{{bucket.nbytes}}")
+    if "eventual" in MODES:
+        # bounded-staleness schedule: lower every phase variant and read
+        # its cross-pod all-reduce bytes off the compiled HLO
+        from repro.dist.collectives import EventualSync
+        ev = EventualSync(mesh, g, max_staleness={MAX_STALENESS},
+                          bucket_bytes={BUCKET_BYTES})
+        state = ev.init_state()
+        print(f"RESULT,eventual,n_buckets,{{ev.n_buckets}}")
+        print(f"RESULT,eventual,period,{{ev.period}}")
+        print(f"RESULT,eventual,state_bytes_per_worker,"
+              f"{{ev.state_bytes()['per_worker']}}")
+        variants = [(p, False) for p in range(ev.period)] + [(0, True)]
+        total_us = 0.0
+        for phase, warm in variants:
+            f = jax.jit(lambda x, s, phase=phase, warm=warm:
+                        ev.apply(x, s, phase=phase, warm=warm))
+            coll = collective_bytes(f.lower(g, state).compile().as_text())
+            tag = "warm" if warm else f"phase{{phase}}"
+            print(f"RESULT,eventual,{{tag}}_crosspod_bytes,"
+                  f"{{coll['raw']['all-reduce']}}")
+            print(f"RESULT,eventual,{{tag}}_crosspod_bytes_analytic,"
+                  f"{{ev.crosspod_allreduce_bytes(phase, warm=warm)}}")
+            out, st = f(g, state)       # compile + warm
+            jax.block_until_ready((out, st))
+            if not warm:
+                t0 = time.perf_counter()
+                for _ in range({STEPS}):
+                    out, st = f(g, st)
+                jax.block_until_ready((out, st))
+                total_us += (time.perf_counter() - t0) / {STEPS} * 1e6
+        print(f"RESULT,eventual,us_per_sync,{{total_us / ev.period:.1f}}")
+        steady = sum(ev.crosspod_allreduce_bytes(p) for p in
+                     range(ev.period)) / ev.period
+        print(f"RESULT,eventual,crosspod_allreduce_bytes,{{steady:.1f}}")
 """
 
 _MODE_SETS = {
     "flat": ["flat"],
     "hier": ["hierarchical"],
-    # bucketed needs the monolithic hierarchical total as its reference
+    # bucketed/eventual need the monolithic hierarchical total as their
+    # reference
     "bucketed": ["hierarchical", "bucketed"],
-    "all": ["flat", "hierarchical", "bucketed"],
+    "eventual": ["hierarchical", "eventual"],
+    "all": ["flat", "hierarchical", "bucketed", "eventual"],
 }
 
 
@@ -152,6 +197,11 @@ def run(csv: bool = True, mode: str = "all"):
             flat = vals.get(("flat", metric))
             if flat:
                 derived = f"{flat / max(value, 1):.1f}x fewer than flat"
+        if metric == "crosspod_allreduce_bytes" and m == "eventual":
+            hier = vals.get(("hierarchical", metric))
+            if hier:
+                derived = (f"{hier / max(value, 1):.1f}x fewer than "
+                           f"sequential (steady state)")
         rows.append((f"gradient_sync_{m}_{metric}", value, derived))
         if csv:
             print(f"{rows[-1][0]},{value},{derived}")
@@ -217,6 +267,43 @@ def validate(rows, mode: str = "all") -> list[str]:
                 failures.append(
                     f"bucket {i}: analytic l1/l2 ratio {ratio} != "
                     f"devices-per-machine {DEVS_PER_MACHINE}")
+
+    period = int(d.get("gradient_sync_eventual_period", 0))
+    if period:
+        # the eventual gate (DESIGN.md §15): per-phase compiled bytes ==
+        # the analytic staleness model EXACTLY, phases sum to the
+        # sequential (hierarchical) total, warm == full sync, steady-state
+        # mean shows the period-x reduction
+        if period != MAX_STALENESS + 1:
+            failures.append(f"eventual period {period} != "
+                            f"max_staleness+1 = {MAX_STALENESS + 1}")
+        phase_bytes = []
+        for p in range(period):
+            hlo = d.get(f"gradient_sync_eventual_phase{p}_crosspod_bytes")
+            analytic = d.get(
+                f"gradient_sync_eventual_phase{p}_crosspod_bytes_analytic")
+            if hlo is None or hlo != analytic:
+                failures.append(
+                    f"eventual phase {p}: HLO cross-pod bytes {hlo} != "
+                    f"analytic model {analytic}")
+            phase_bytes.append(hlo or 0)
+        warm = d.get("gradient_sync_eventual_warm_crosspod_bytes", 0)
+        warm_an = d.get("gradient_sync_eventual_warm_crosspod_bytes_analytic")
+        if warm != warm_an:
+            failures.append(f"eventual warm: HLO bytes {warm} != "
+                            f"analytic {warm_an}")
+        if hier and sum(phase_bytes) != hier:
+            failures.append(
+                f"eventual phases {phase_bytes} sum to {sum(phase_bytes)}, "
+                f"sequential hierarchical moved {hier}")
+        if hier and warm != hier:
+            failures.append(f"eventual warm sync {warm} != hierarchical "
+                            f"full sync {hier}")
+        steady = d.get("gradient_sync_eventual_crosspod_allreduce_bytes", 0)
+        if hier and abs(steady - hier / period) > 1:
+            failures.append(
+                f"eventual steady-state mean {steady} != hierarchical/"
+                f"period = {hier / period:.1f}")
     return failures
 
 

@@ -41,6 +41,33 @@ for p in (str(_ROOT), str(_ROOT / "src")):
 
 BASELINE_DIR = _ROOT / "benchmarks" / "baselines"
 
+# every bench the driver runs (the registry the baseline-drift guard
+# checks): each name must have a committed baselines/BENCH_<name>.json
+# and every committed record must correspond to a registered bench
+BENCH_NAMES = ("fig6", "fig7", "fig8", "dist", "ring", "pipeline",
+               "serving", "checkpoint", "engine", "kernels")
+
+
+def check_baselines(baseline_dir: Path = BASELINE_DIR) -> list[str]:
+    """Baseline-drift guard: a bench registered here with no committed
+    baseline record silently escapes the perf gate, and a stale record
+    with no bench behind it gates nothing — both fail CI."""
+    problems = []
+    committed = {p.stem.removeprefix("BENCH_")
+                 for p in baseline_dir.glob("BENCH_*.json")} - {"summary"}
+    for name in BENCH_NAMES:
+        if name not in committed:
+            problems.append(
+                f"bench '{name}' is registered in run.py but has no "
+                f"committed {baseline_dir}/BENCH_{name}.json "
+                f"(run.py --write-baselines, then commit)")
+    for name in sorted(committed - set(BENCH_NAMES)):
+        problems.append(
+            f"{baseline_dir}/BENCH_{name}.json has no registered bench "
+            f"named '{name}' in run.py (stale record? delete it or "
+            f"register the bench)")
+    return problems
+
 
 def _jsonable(v):
     try:
@@ -151,12 +178,18 @@ def compare_primaries(records: dict, baseline_dir: Path,
         else:
             bad = nv > bv * (1 + tolerance)
         verdict = "REGRESSED" if bad else "ok"
+        # absolute delta alongside the percentage: near-zero baselines
+        # make relative numbers unreadable in CI logs
+        delta = nv - bv
+        rel = delta / bv if bv else float("inf")
         print(f"{name}: {pr['metric']} {nv:.6g} vs baseline {bv:.6g} "
-              f"({pr['better']} is better) -> {verdict}")
+              f"(delta {delta:+.6g}, {rel:+.2%}; {pr['better']} is better) "
+              f"-> {verdict}")
         if bad:
             failures.append(
                 f"{name}: {pr['metric']} regressed beyond {tolerance:.0%}: "
-                f"{nv:.6g} vs baseline {bv:.6g} ({pr['better']} is better)")
+                f"{nv:.6g} vs baseline {bv:.6g} (delta {delta:+.6g}, "
+                f"{rel:+.2%}; {pr['better']} is better)")
     return failures
 
 
@@ -180,7 +213,20 @@ def main() -> None:
                     help="write the final metrics-registry snapshot "
                          "(serving latency histograms, engine gauges) "
                          "as JSONL")
+    ap.add_argument("--check-baselines", action="store_true",
+                    help="baseline-drift guard only (no benches run): "
+                         "every registered bench must have a committed "
+                         "baseline record and vice versa; exit 1 on drift")
     args = ap.parse_args()
+
+    if args.check_baselines:
+        problems = check_baselines()
+        for p in problems:
+            print(f"BASELINE DRIFT: {p}")
+        if not problems:
+            print(f"baseline records in sync with run.py registry "
+                  f"({len(BENCH_NAMES)} benches)")
+        sys.exit(1 if problems else 0)
 
     from repro import obs
     if args.trace:
@@ -247,6 +293,8 @@ def main() -> None:
         ("kernels", "\n## Pallas kernels (interpret-mode + oracle walls)",
          _std(bench_kernels)),
     ]
+    assert tuple(n for n, _, _ in benches) == BENCH_NAMES, \
+        "bench list drifted from the BENCH_NAMES registry"
     for name, title, fn in benches:
         run_bench(name, title, fn)
 

@@ -385,6 +385,39 @@ def checkpoint_bytes(leaves, axis_sizes=None, n_hosts: int = 1) -> dict:
             "bytes_per_host": -(-total // n_hosts)}
 
 
+def eventual_sync_bytes(leaves, *, n_data: int, n_workers: int,
+                        max_staleness: int = 0,
+                        bucket_bytes: int | None = None) -> dict:
+    """Device-byte model of the eventual-consistency sync state
+    (DESIGN.md §15): each worker holds one stale remote-pod 1/``n_data``
+    shard per gradient bucket, so the footprint is the full gradient
+    payload divided by the intra-pod reduce-scatter factor — the price of
+    bounding staleness instead of synchronizing every step.
+
+    ``leaves``: iterable of ``(shape, dtype)`` per-worker gradient leaves
+    (no worker dim).  Delegates to the SAME :class:`~repro.dist.bucketing.
+    BucketPlan` + ``eventual_state_bytes`` the runtime uses, so the model
+    is exact, and adds the steady-state cross-pod traffic summary.
+    """
+    import jax
+    from repro.dist.bucketing import DEFAULT_BUCKET_BYTES, BucketPlan
+    from repro.dist.collectives import (eventual_crosspod_bytes,
+                                        eventual_state_bytes)
+    structs = [jax.ShapeDtypeStruct(tuple(s), d) for s, d in leaves]
+    plan = BucketPlan.build(structs, cap_bytes=bucket_bytes
+                            or DEFAULT_BUCKET_BYTES)
+    state = eventual_state_bytes(plan, n_data, n_workers)
+    period = max_staleness + 1
+    full = eventual_crosspod_bytes(plan, n_data, max_staleness=0, phase=0)
+    steady = sum(eventual_crosspod_bytes(plan, n_data,
+                                         max_staleness=max_staleness,
+                                         phase=p) for p in range(period))
+    return {**state, "period": period,
+            "crosspod_bytes_full_sync": full,
+            "crosspod_bytes_per_step_steady": steady / period,
+            "crosspod_reduction": full / max(steady / period, 1)}
+
+
 def naive_bytes(graph: Graph, shapes, dtypes) -> int:
     """Sum of all internal node outputs with no sharing (the Fig. 7 baseline)."""
     ext = {(n.uid, 0) for n in graph.variables}

@@ -3,7 +3,19 @@ pre-fetching and pre-processing are multi-threaded").
 
 ``PrefetchIterator`` wraps any iterator with a bounded background queue so
 decode/transform overlaps training compute — the CPU-thread analogue of
-the engine's compute/IO overlap.
+the engine's compute/IO overlap.  Worker threads shut down when the
+consumer abandons the iterator early, and reader exceptions surface at
+the consumer's ``next()`` instead of hanging the queue.
+
+Multi-host sharding (DESIGN.md §15): every iterator here can run in
+*per-host shard* mode — pass ``process_index``/``process_count`` and each
+host derives the SAME global shuffled order from the shared seed, then
+reads only its contiguous row-slice of every global batch
+(:func:`global_batch_slice`).  Shards are disjoint, cover the epoch, and
+concatenating the per-host batches in process order reproduces the
+single-host stream exactly — which is what lets
+``jax.make_array_from_process_local_data`` assemble the global batch on a
+process-major ``(pod, data)`` mesh with no cross-host shuffle.
 """
 from __future__ import annotations
 
@@ -14,11 +26,38 @@ from typing import Callable
 import numpy as np
 
 
+def global_batch_slice(batch: int, process_index: int,
+                       process_count: int) -> tuple[int, int]:
+    """Row range ``[start, stop)`` of the global batch owned by one host.
+
+    Contiguous per-host slices line up with process-major device order on
+    a ``(pod, data)`` mesh, so local arrays drop into the global batch
+    with zero resharding.
+
+    >>> [global_batch_slice(8, p, 4) for p in range(4)]
+    [(0, 2), (2, 4), (4, 6), (6, 8)]
+    """
+    if not 0 <= process_index < process_count:
+        raise ValueError(f"process_index {process_index} out of range "
+                         f"[0, {process_count})")
+    if batch % process_count:
+        raise ValueError(f"global batch {batch} not divisible by "
+                         f"process_count {process_count}")
+    local = batch // process_count
+    return process_index * local, (process_index + 1) * local
+
+
 class SyntheticLM:
-    """Deterministic synthetic token stream (for examples / smoke runs)."""
+    """Deterministic synthetic token stream (for examples / smoke runs).
+
+    With ``process_count > 1`` every host generates the identical global
+    batch from the shared seed and yields only its own row slice — the
+    per-host shards concatenate back to the single-host stream bit-exact.
+    """
 
     def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0,
-                 n_batches: int = 1 << 30, fixed_pattern: bool = False):
+                 n_batches: int = 1 << 30, fixed_pattern: bool = False,
+                 process_index: int = 0, process_count: int = 1):
         self.vocab, self.seq_len, self.batch = vocab, seq_len, batch
         self.seed = seed
         self.n_batches = n_batches
@@ -26,6 +65,8 @@ class SyntheticLM:
         # bigram rule (t+1 = t + stride mod V) learnable within few steps,
         # for short demo runs where per-row random strides are data-starved
         self.fixed_pattern = fixed_pattern
+        self._lo, self._hi = global_batch_slice(batch, process_index,
+                                                process_count)
 
     def __iter__(self):
         rng = np.random.RandomState(self.seed)
@@ -41,22 +82,61 @@ class SyntheticLM:
             noise = rng.rand(self.batch, self.seq_len) < 0.05
             toks = np.where(noise, rng.randint(0, self.vocab, toks.shape),
                             toks)
-            yield {"tokens": toks.astype(np.int32)}
+            yield {"tokens": toks[self._lo:self._hi].astype(np.int32)}
 
 
 class DataIterator:
     """Batches decoded records from a RecordReader, with shuffling
-    (random seek makes shuffling cheap) and a decode_fn per record."""
+    (random seek makes shuffling cheap) and a decode_fn per record.
+
+    Multi-host: every host shuffles the full epoch with the shared seed
+    (so the global order is common knowledge), then decodes only its
+    :func:`global_batch_slice` rows of each global batch — host-local
+    RecordIO reads, disjoint across hosts, covering the epoch.
+    ``record_indices()`` exposes the assignment for auditing.
+    """
 
     def __init__(self, reader, batch: int, decode_fn: Callable[[bytes], np.ndarray],
-                 shuffle: bool = True, seed: int = 0, drop_last: bool = True):
+                 shuffle: bool = True, seed: int = 0, drop_last: bool = True,
+                 process_index: int = 0, process_count: int = 1):
         self.reader, self.batch, self.decode_fn = reader, batch, decode_fn
         self.shuffle, self.seed, self.drop_last = shuffle, seed, drop_last
+        self.process_index, self.process_count = process_index, process_count
+        self._lo, self._hi = global_batch_slice(batch, process_index,
+                                                process_count)
+        if not drop_last and process_count > 1:
+            raise ValueError("multi-host sharding requires drop_last=True "
+                             "(a ragged tail cannot split evenly)")
 
-    def __iter__(self):
+    def _epoch_order(self) -> np.ndarray:
         order = np.arange(len(self.reader))
         if self.shuffle:
             np.random.RandomState(self.seed).shuffle(order)
+        return order
+
+    def record_indices(self) -> np.ndarray:
+        """Record indices THIS host reads, in read order — per global
+        batch, rows ``[lo, hi)`` of the shared shuffled order."""
+        order = self._epoch_order()
+        n_full = len(order) // self.batch
+        picks = []
+        for t in range(n_full):
+            row = order[t * self.batch:(t + 1) * self.batch]
+            picks.append(row[self._lo:self._hi])
+        if picks:
+            return np.concatenate(picks)
+        return np.empty((0,), dtype=order.dtype)
+
+    def __iter__(self):
+        order = self._epoch_order()
+        if self.process_count > 1:
+            n_full = len(order) // self.batch
+            for t in range(n_full):
+                row = order[t * self.batch:(t + 1) * self.batch]
+                buf = [self.decode_fn(self.reader.read(int(i)))
+                       for i in row[self._lo:self._hi]]
+                yield np.stack(buf)
+            return
         buf = []
         for i in order:
             buf.append(self.decode_fn(self.reader.read(int(i))))
@@ -67,8 +147,26 @@ class DataIterator:
             yield np.stack(buf)
 
 
+class _ReaderError:
+    """Queue envelope for an exception raised inside a worker thread."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class PrefetchIterator:
-    """Background-thread prefetch with a bounded queue."""
+    """Background-thread prefetch with a bounded queue.
+
+    Lifecycle guarantees (the §2.4 prefetcher grown up):
+
+    * abandoning the consumer early (``break``, ``close()``, GC of the
+      generator) stops the workers — ``put`` never blocks forever because
+      every enqueue re-checks a stop flag on a timeout loop, and the
+      ``finally`` block drains the queue and joins the threads;
+    * an exception in the wrapped iterator propagates to the consumer's
+      ``next()`` (re-raised from a ``_ReaderError`` envelope) instead of
+      silently ending — or worse, hanging — the stream.
+    """
 
     _SENTINEL = object()
 
@@ -81,27 +179,55 @@ class PrefetchIterator:
         q: queue.Queue = queue.Queue(maxsize=self.depth)
         src = iter(self._it)
         lock = threading.Lock()
+        stop = threading.Event()
         n_done = [0]
 
+        def put(item) -> bool:
+            # bounded put that gives up when the consumer is gone
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
         def worker():
-            while True:
-                with lock:
-                    try:
+            while not stop.is_set():
+                try:
+                    with lock:
                         item = next(src)
-                    except StopIteration:
-                        break
-                q.put(item)
+                except StopIteration:
+                    break
+                except BaseException as exc:  # propagate, don't hang
+                    put(_ReaderError(exc))
+                    break
+                if not put(item):
+                    return
             with lock:
                 n_done[0] += 1
                 if n_done[0] == self.num_threads:
-                    q.put(self._SENTINEL)
+                    put(self._SENTINEL)
 
         threads = [threading.Thread(target=worker, daemon=True)
                    for _ in range(self.num_threads)]
         for t in threads:
             t.start()
-        while True:
-            item = q.get()
-            if item is self._SENTINEL:
-                break
-            yield item
+        try:
+            while True:
+                item = q.get()
+                if item is self._SENTINEL:
+                    break
+                if isinstance(item, _ReaderError):
+                    raise item.exc
+                yield item
+        finally:
+            stop.set()
+            # unblock any worker stuck on a full queue, then join
+            while True:
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            for t in threads:
+                t.join(timeout=2.0)

@@ -9,7 +9,10 @@ The distribution layer of the reproduction (DESIGN.md §5, §7):
   covering every config in ``repro/configs``;
 * ``collectives`` — ``gradient_sync``: flat vs the paper's §3.3 two-level
   (hierarchical) gradient all-reduce over a ``(pod, data, model)`` mesh,
-  plus the bucketed overlap-friendly schedule;
+  plus the bucketed overlap-friendly schedule and ``EventualSync`` — the
+  §3.3 eventual-consistency KVStore as bounded-staleness cross-pod sync
+  (round-robin bucket schedule, analytic byte/state models, DESIGN.md
+  §15);
 * ``bucketing`` — ``BucketPlan`` (first-fit byte-capped gradient packing)
   and ``overlap_taps`` (the custom_vjp trick that emits each bucket's
   sync inside the backward computation — the §4 lazy-push analogue);
@@ -44,7 +47,9 @@ from . import compat  # noqa: F401  (installs jax API backfills)
 from .annotate import BATCH, DATA_AXES, ann, ann_first_fit, _mesh_axes
 from .bucketing import (DEFAULT_BUCKET_BYTES, Bucket, BucketPlan,
                         leaf_nbytes, overlap_taps)
-from .collectives import gradient_sync, worker_axes
+from .collectives import (EventualSync, eventual_crosspod_bytes,
+                          eventual_state_bytes, eventual_sync_buckets,
+                          gradient_sync, worker_axes)
 from .partition import (batch_pspecs, cache_pspecs, make_shardings,
                         param_pspecs)
 from .pipeline import (PipelineSpec, pipeline_bubble_fraction,
@@ -55,7 +60,9 @@ from .ring import RingSpec, contributing_steps, ring_attention, \
 
 __all__ = [
     "BATCH", "DATA_AXES", "ann", "ann_first_fit", "_mesh_axes",
-    "gradient_sync", "worker_axes",
+    "gradient_sync", "worker_axes", "EventualSync",
+    "eventual_sync_buckets", "eventual_crosspod_bytes",
+    "eventual_state_bytes",
     "Bucket", "BucketPlan", "DEFAULT_BUCKET_BYTES", "leaf_nbytes",
     "overlap_taps",
     "param_pspecs", "batch_pspecs", "cache_pspecs", "make_shardings",

@@ -45,8 +45,19 @@ def main():
     ap.add_argument("--init-from", metavar="CKPT", default=None,
                     help="warm-start params from a checkpoint directory "
                          "(optimizer state fresh, step 0)")
-    ap.add_argument("--mesh", choices=["host", "single", "multi"],
-                    default="host")
+    ap.add_argument("--mesh", choices=["host", "single", "multi", "dist"],
+                    default="host",
+                    help="'dist' builds a (pod, data, model) mesh over all "
+                         "processes of a jax.distributed job (DESIGN.md §15; "
+                         "launch via repro.launch.multihost or set the "
+                         "REPRO_COORDINATOR/... env addressing)")
+    ap.add_argument("--sync-mode", choices=["auto", "sequential", "eventual"],
+                    default="auto",
+                    help="cross-worker gradient sync: GSPMD-implicit, "
+                         "explicit two-level every step, or bounded-staleness "
+                         "eventual consistency (DESIGN.md §15)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="staleness bound (steps) for --sync-mode eventual")
     ap.add_argument("--overlap", action="store_true",
                     help="bucketed gradient sync emitted inside backward "
                          "(DESIGN.md §7); numerically identical")
@@ -87,7 +98,13 @@ def main():
         over = {"vocab": args.vocab} if args.vocab else {}
         cfg = reduced(cfg, **over)
 
-    if args.mesh != "host":
+    if args.mesh == "dist":
+        from repro.launch.mesh import (initialize_distributed,
+                                       make_distributed_mesh)
+        initialize_distributed()
+        mesh = make_distributed_mesh()
+        ctx = jax.set_mesh(mesh)
+    elif args.mesh != "host":
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.mesh == "multi",
                                     pp_stages=args.pp_stages)
@@ -104,9 +121,15 @@ def main():
                        grad_clip=5.0, overlap=args.overlap,
                        bucket_mb=args.bucket_mb,
                        pp_stages=args.pp_stages,
-                       microbatches=args.microbatches)
+                       microbatches=args.microbatches,
+                       sync_mode=args.sync_mode,
+                       max_staleness=args.max_staleness)
+    # per-host shard of the synthetic stream (identity single-process):
+    # every host derives the same global batches and keeps its own rows
     data = PrefetchIterator(
-        SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps),
+        SyntheticLM(cfg.vocab, args.seq, args.batch, n_batches=args.steps,
+                    process_index=jax.process_index(),
+                    process_count=jax.process_count()),
         depth=4)
     logger = None
     if args.metrics:

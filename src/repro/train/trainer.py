@@ -58,6 +58,16 @@ class TrainConfig:
     # .microbatches; validated against the arch in Trainer.__init__.
     pp_stages: int = 1
     microbatches: int = 1
+    # cross-worker gradient sync (DESIGN.md §15): "auto" leaves the
+    # reduction to GSPMD (implicit, the default); "sequential" computes
+    # per-worker grads explicitly and reduces them with the two-level
+    # bucketed schedule every step; "eventual" additionally bounds each
+    # bucket's cross-pod exchange to every max_staleness+1 steps
+    # (EventualSync — the paper's §2.3 eventual-consistency KVStore).
+    # Explicit modes degrade to "auto" when the ambient mesh has <= 1
+    # gradient worker.
+    sync_mode: str = "auto"
+    max_staleness: int = 0
 
 
 class Trainer:
@@ -78,6 +88,16 @@ class Trainer:
                               seq_shard=FLAGS.seq_shard)
             set_flags(pp_stages=tcfg.pp_stages,
                       microbatches=tcfg.microbatches)
+        if tcfg.sync_mode not in ("auto", "sequential", "eventual"):
+            raise ValueError(f"sync_mode must be auto|sequential|eventual, "
+                             f"got {tcfg.sync_mode!r}")
+        if tcfg.sync_mode != "auto" and (tcfg.pp_stages > 1 or tcfg.overlap):
+            raise ValueError("explicit sync_mode is incompatible with "
+                             "pipeline parallelism and overlap taps")
+        # eventual-sync runtime state (built lazily in fit, when the
+        # params template and ambient mesh are known)
+        self._ev = None
+        self._ev_steps: dict = {}
         self.model = get_model(cfg)
         self.optimizer = optimizer or sgd_momentum(
             lr=tcfg.lr, mu=tcfg.mu, weight_decay=tcfg.weight_decay)
@@ -141,6 +161,145 @@ class Trainer:
                                        **metrics}
         return step
 
+    # -- explicit cross-worker sync (DESIGN.md §15) --------------------
+    def _sync_setup(self):
+        """``(mesh, waxes, n_workers)`` for the explicit sync path, or
+        ``None`` when the ambient mesh cannot support it (no mesh, or a
+        single gradient worker) — the caller degrades to the auto path."""
+        from repro.dist import worker_axes
+        from repro.dist import compat as dist_compat
+        mesh = dist_compat.current_mesh()
+        if mesh is None:
+            return None
+        waxes = worker_axes(mesh)
+        sizes = dict(mesh.shape)
+        n = 1
+        for a in waxes:
+            n *= sizes[a]
+        if n <= 1:
+            return None
+        if sizes.get("model", 1) > 1:
+            raise ValueError(
+                "explicit sync_mode holds params replicated inside the "
+                "per-worker region; a multi-way model axis is not supported")
+        return mesh, waxes, n
+
+    def _make_grad_fn(self, mesh, waxes):
+        """Per-worker loss/grads as global ``(W, ...)`` arrays: params
+        replicated into a fully-manual shard_map, batch split on dim 0
+        over the worker axes, annotations suppressed (the pipeline-stage
+        precedent — model code must not re-annotate inside manual)."""
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import annotate as dist_annotate
+        from repro.dist import compat as dist_compat
+        model = self.model
+
+        def per_worker(params, batch):
+            with dist_annotate.suppressed():
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, batch)
+            lead = lambda x: jnp.asarray(x)[None]
+            return (lead(loss), jax.tree.map(lead, metrics),
+                    jax.tree.map(lead, grads))
+
+        return dist_compat.shard_map(
+            per_worker, mesh,
+            in_specs=(P(), P(waxes)),
+            out_specs=(P(waxes), P(waxes), P(waxes)))
+
+    def _finish_step(self, loss_w, metrics_w, grads, opt_state, params):
+        """Shared tail of the explicit step: clip, schedule, update."""
+        clip = self.tcfg.grad_clip
+        if clip:
+            gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        else:
+            gn = jnp.zeros(())
+        lr_scale = self.schedule(opt_state["step"])
+        params, opt_state = self.optimizer.update(grads, opt_state, params,
+                                                  lr_scale=lr_scale)
+        metrics = {"loss": loss_w.mean(), "grad_norm": gn,
+                   **jax.tree.map(lambda x: x.mean(axis=0), metrics_w)}
+        return params, opt_state, metrics
+
+    def _make_sequential_step(self, mesh, waxes, n_workers):
+        from repro.dist import gradient_sync
+        grad_fn = self._make_grad_fn(mesh, waxes)
+        bucket_bytes = max(int(self.tcfg.bucket_mb * 2**20), 1)
+
+        @jax.jit
+        def step(params, opt_state, batch):
+            loss_w, metrics_w, grads_w = grad_fn(params, batch)
+            synced = gradient_sync(mesh, grads_w, mode="bucketed",
+                                   bucket_bytes=bucket_bytes)
+            grads = jax.tree.map(lambda g: g / n_workers, synced)
+            return self._finish_step(loss_w, metrics_w, grads,
+                                     opt_state, params)
+        return step
+
+    def _setup_eventual(self, mesh, waxes, n_workers, params):
+        from repro.dist.collectives import EventualSync
+        template = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_workers,) + p.shape, p.dtype),
+            params)
+        self._ev = EventualSync(
+            mesh, template, max_staleness=self.tcfg.max_staleness,
+            bucket_bytes=max(int(self.tcfg.bucket_mb * 2**20), 1))
+        self._ev_grad_fn = self._make_grad_fn(mesh, waxes)
+        self._ev_n_workers = n_workers
+        self._ev_steps = {}
+        return self._ev.init_state()
+
+    def _eventual_step(self, phase: int, warm: bool):
+        """jit variant for one (phase, warm) — the schedule is static, so
+        each variant lowers exactly the scheduled buckets' cross-pod
+        collectives (what makes the HLO byte model exact)."""
+        key = (phase, warm)
+        if key not in self._ev_steps:
+            ev, grad_fn = self._ev, self._ev_grad_fn
+            n_workers = self._ev_n_workers
+
+            @jax.jit
+            def step(params, opt_state, batch, sync_state):
+                loss_w, metrics_w, grads_w = grad_fn(params, batch)
+                synced, new_state = ev.apply(grads_w, sync_state,
+                                             phase=phase, warm=warm)
+                grads = jax.tree.map(lambda g: g / n_workers, synced)
+                out = self._finish_step(loss_w, metrics_w, grads,
+                                        opt_state, params)
+                return (*out, new_state)
+            self._ev_steps[key] = step
+        return self._ev_steps[key]
+
+    def _make_globalize(self):
+        """Batch host->device transfer.  Single-process: plain asarray.
+        Multi-process (DESIGN.md §15): each host holds its contiguous
+        row-slice of the global batch (``data.pipeline.global_batch_slice``
+        order), which lines up with process-major device order on the
+        ``(pod, data)`` mesh — ``make_array_from_process_local_data``
+        assembles the global array with no cross-host shuffle."""
+        if jax.process_count() == 1:
+            return lambda b: {k: jnp.asarray(v) for k, v in b.items()}
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import worker_axes
+        from repro.dist import compat as dist_compat
+        mesh = dist_compat.current_mesh()
+        if mesh is None:
+            raise ValueError("multi-process fit needs an ambient mesh "
+                             "(jax.set_mesh) to place the global batch")
+        sharding = NamedSharding(mesh, P(worker_axes(mesh)))
+        nproc = jax.process_count()
+
+        def to_global(v):
+            v = np.asarray(v)
+            gshape = (v.shape[0] * nproc,) + v.shape[1:]
+            return jax.make_array_from_process_local_data(sharding, v,
+                                                          gshape)
+        return lambda b: {k: to_global(v) for k, v in b.items()}
+
     # ------------------------------------------------------------------
     def fit(self, data: Iterator, seed: int = 0, state=None,
             start_step: int = 0):
@@ -163,8 +322,20 @@ class Trainer:
         ``data`` to the same position.
         """
         params, opt_state = state or self.init_state(seed)
-        step_fn = self._make_step()
+        mode = self.tcfg.sync_mode
+        setup = self._sync_setup() if mode != "auto" else None
+        sync_state = None
+        if setup is None:
+            # auto path — or explicit mode on a 1-worker mesh, where the
+            # explicit reduction is the identity and GSPMD already agrees
+            step_fn = self._make_step()
+        elif mode == "sequential":
+            step_fn = self._make_sequential_step(*setup)
+        else:  # eventual
+            sync_state = self._setup_eventual(*setup, params)
+            step_fn = None
         rec = obs.get_recorder()
+        globalize = self._make_globalize()
         t0 = time.time()
         t_log, i_log = t0, start_step    # steps_per_s window since last log
         data = iter(data)
@@ -174,11 +345,18 @@ class Trainer:
                 batch = next(data, None)
             if batch is None:
                 break
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            batch = globalize(batch)
             with rec.span("step", cat="train", track="trainer", step=i), \
                     obs.annotation("train_step"):
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     batch)
+                if step_fn is not None:
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch)
+                else:
+                    phase, warm = self._ev.phase_for(i)
+                    params, opt_state, metrics, sync_state = \
+                        self._eventual_step(phase, warm)(
+                            params, opt_state, batch, sync_state)
+                    self._ev.record_step(i)
             if i % self.tcfg.log_every == 0 or i == self.tcfg.total_steps - 1:
                 with rec.span("metrics_fetch", cat="train", track="trainer",
                               step=i):
